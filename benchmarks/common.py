@@ -1,0 +1,58 @@
+"""Shared pipeline builders for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Engine, PipelineSpec  # noqa: E402
+
+DOCS = [
+    "the quick brown fox jumps over the lazy dog",
+    "streaming systems process unbounded data in real time",
+    "to be or not to be that is the question",
+    "a message broker decouples producers from consumers",
+] * 2
+
+
+def word_count_spec(*, delays: dict[str, float] | None = None,
+                    n_files: int = 30, interval: float = 0.25,
+                    bw: float = 1000.0) -> tuple[PipelineSpec, object]:
+    """Fig. 2a pipeline: producer -> broker -> split -> count -> sink.
+
+    ``delays`` maps component host (h1..h5) to link latency in ms;
+    unspecified links use a very low delay (<10 ms, like the paper).
+    """
+    delays = delays or {}
+    spec = PipelineSpec()
+    spec.add_switch("s1")
+    for h in ["h1", "h2", "h3", "h4", "h5"]:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=delays.get(h, 2.0), bw=bw)
+    spec.add_broker("h2")
+    for t in ["raw-data", "words", "counts"]:
+        spec.add_topic(t, leader="h2")
+    spec.add_producer("h1", "DIRECTORY", topic="raw-data", docs=DOCS,
+                      totalMessages=n_files, interval=interval)
+    spec.add_spe("h3", query="split", inTopic="raw-data", outTopic="words",
+                 pollInterval=0.05)
+    spec.add_spe("h4", query="count", inTopic="words", outTopic="counts",
+                 pollInterval=0.05)
+    sink = spec.add_consumer("h5", "STANDARD", topic="counts",
+                             pollInterval=0.05)
+    return spec, sink
+
+
+def run_spec(spec, until: float, seed: int = 0):
+    eng = Engine(spec, seed=seed)
+    t0 = time.perf_counter()
+    mon = eng.run(until=until)
+    wall = time.perf_counter() - t0
+    return eng, mon, wall
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The benchmark output contract: name,us_per_call,derived CSV."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,43 @@
+"""Fig. 5: e2e word-count latency vs per-component link delay.
+
+One curve per component (producer h1, broker h2, SPE h3, consumer h5):
+raise that component's link delay while the others stay at 2 ms.  The
+paper's finding: broker and SPE delays hurt the most (up to ~6x at
+150 ms) because those components talk to everything / sit mid-pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, run_spec, word_count_spec
+
+DELAYS_MS = [10, 50, 100, 150]
+COMPONENTS = {"producer": "h1", "broker": "h2", "spe": "h3",
+              "consumer": "h5"}
+
+
+def run(n_files: int = 30) -> dict:
+    results: dict[str, list[float]] = {}
+    base = None
+    for comp, host in COMPONENTS.items():
+        curve = []
+        for d in DELAYS_MS:
+            spec, _ = word_count_spec(delays={host: float(d)},
+                                      n_files=n_files)
+            _, mon, wall = run_spec(spec, until=n_files * 0.25 + 20.0)
+            lats = mon.e2e_latency()
+            assert len(lats) >= n_files * 0.9, (comp, d, len(lats))
+            curve.append(float(np.mean(lats)))
+            emit(f"fig5/{comp}/{d}ms", wall * 1e6,
+                 f"e2e_latency_s={curve[-1]:.4f}")
+        results[comp] = curve
+    # paper's qualitative claim: broker & spe curves dominate at 150 ms
+    worst = {c: results[c][-1] for c in results}
+    emit("fig5/claim", 0.0,
+         "broker+spe_dominate="
+         f"{worst['broker'] > worst['producer'] and worst['spe'] > worst['consumer']}")
+    return results
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,70 @@
+"""Fig. 9: emulator resource usage vs number of coordinating sites.
+
+Measures the real process: CPU time consumed and peak-RSS delta while
+emulating the Fig. 6a scenario at 2..10 sites, plus the modeled producer
+buffer reservation at 16 MB vs 32 MB (Fig. 9c's buffer sensitivity).
+"""
+from __future__ import annotations
+
+import os
+import resource
+import time
+
+import psutil
+
+from benchmarks.common import emit
+from repro.core import Engine, PipelineSpec
+
+
+def build(sites: int, buffer_mb: int = 32) -> PipelineSpec:
+    spec = PipelineSpec()
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, sites + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(h, bufferMemory=buffer_mb << 20)
+    spec.add_topic("topicA", leader=hosts[0], replication=min(3, sites))
+    spec.add_topic("topicB", leader=hosts[-1], replication=min(3, sites))
+    for h in hosts:
+        spec.add_producer(h, "SYNTHETIC", topics=["topicA", "topicB"],
+                          rateKbps=30.0, msgSize=512)
+        spec.add_consumer(h, "STANDARD", topics=["topicA", "topicB"],
+                          pollInterval=0.5)
+    return spec
+
+
+def run() -> dict:
+    proc = psutil.Process(os.getpid())
+    out = {}
+    for sites in [2, 4, 6, 8, 10]:
+        spec = build(sites)
+        rss0 = proc.memory_info().rss
+        cpu0 = time.process_time()
+        eng = Engine(spec, seed=1)
+        mon = eng.run(until=120.0)
+        cpu = time.process_time() - cpu0
+        rss = proc.memory_info().rss - rss0
+        util = eng.resource_report()
+        med_util = sorted(v["util_pct"] for v in util.values())[
+            len(util) // 2]
+        out[sites] = dict(cpu_s=cpu, rss_mb=rss / 1e6,
+                          emulated_median_util=med_util,
+                          msgs=len(mon.msgs))
+        emit(f"fig9/sites={sites}", cpu * 1e6,
+             f"host_cpu_s={cpu:.2f};rss_delta_mb={rss / 1e6:.1f};"
+             f"emulated_util_pct={med_util:.2f};msgs={len(mon.msgs)}")
+    # buffer-size sensitivity (modeled reservation, Fig. 9c)
+    for mb in (16, 32):
+        reserved = 10 * mb          # 10 producers x buffer
+        emit(f"fig9/buffer={mb}MB", 0.0,
+             f"modeled_producer_reservation_mb={reserved}")
+    grow = out[10]["cpu_s"] / max(out[2]["cpu_s"], 1e-9)
+    emit("fig9/claim", 0.0,
+         f"cpu_growth_2to10_sites={grow:.2f}x;"
+         f"peak_rss_increase_mb={out[10]['rss_mb'] - out[2]['rss_mb']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,73 @@
+"""Roofline table: aggregate the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits the
+per-(arch × shape × mesh) three-term roofline table, bottleneck labels and
+the MODEL_FLOPS/HLO_FLOPs ratio.  Writes markdown to
+results/roofline_table.md for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+MD = os.path.join(os.path.dirname(__file__), "..", "results",
+                  "roofline_table.md")
+
+
+def load(mesh: str) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(OUT, f"*__{mesh}.json"))):
+        if "__opt" in os.path.basename(p):
+            continue
+        r = json.load(open(p))
+        rows.append(r)
+    return rows
+
+
+def run() -> dict:
+    if not os.path.isdir(OUT):
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return {}
+    lines = ["| arch | shape | mesh | bottleneck | t_comp (s) | t_mem (s) "
+             "| t_ici (s) | t_dcn (s) | useful | frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    summary = {"OK": 0, "SKIP": 0, "FAIL": 0}
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            summary[r["status"]] += 1
+            if r["status"] == "SKIP":
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                             f"SKIP(full-attn long ctx) | | | | | | |")
+                continue
+            if r["status"] != "OK":
+                lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                             f"FAIL | | | | | | |")
+                continue
+            t = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | "
+                f"{t['bottleneck']} | {t['t_compute']:.4f} | "
+                f"{t['t_memory']:.4f} | {t['t_ici']:.4f} | "
+                f"{t['t_dcn']:.4f} | {t['useful_ratio']:.3f} | "
+                f"{t['roofline_fraction']:.4f} |")
+            if mesh == "16x16":
+                emit(f"roofline/{r['arch']}/{r['shape']}",
+                     t["t_compute"] * 1e6,
+                     f"bneck={t['bottleneck']};frac="
+                     f"{t['roofline_fraction']:.4f};"
+                     f"useful={t['useful_ratio']:.3f}")
+    os.makedirs(os.path.dirname(MD), exist_ok=True)
+    with open(MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    emit("roofline/summary", 0.0,
+         f"ok={summary['OK']};skip={summary['SKIP']};fail={summary['FAIL']};"
+         f"table={os.path.relpath(MD)}")
+    return summary
+
+
+if __name__ == "__main__":
+    print(run())

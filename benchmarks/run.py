@@ -1,0 +1,39 @@
+"""Benchmark runner: one module per paper table/figure + the roofline.
+
+Output contract: ``name,us_per_call,derived`` CSV lines per benchmark.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig5_link_delay, fig6_partition,
+                            fig7_reproductions, fig8_accuracy,
+                            fig9_resources, roofline_table)
+    mods = [
+        ("fig5_link_delay", fig5_link_delay),
+        ("fig6_partition", fig6_partition),
+        ("fig7_reproductions", fig7_reproductions),
+        ("fig8_accuracy", fig8_accuracy),
+        ("fig9_resources", fig9_resources),
+        ("roofline_table", roofline_table),
+    ]
+    failures = 0
+    for name, mod in mods:
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception:                                  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

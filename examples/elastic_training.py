@@ -1,0 +1,59 @@
+"""Fault-tolerant LM training: checkpoint/restart + elastic rescale.
+
+    PYTHONPATH=src python examples/elastic_training.py
+
+Trains a reduced LM with the ElasticTrainer: a failure is injected
+mid-run (the driver restores the latest async checkpoint and replays),
+then the run "loses a pod": the same state restores onto a smaller mesh
+via resharding and training continues — the 1000-node fault story at
+laptop scale.
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.base import ShapeCfg
+from repro.data.pipeline import make_source
+from repro.runtime import ElasticTrainer
+from repro.train import make_step_bundle
+
+
+def main() -> None:
+    cfg = reduce_for_smoke(get_config("qwen2-7b"))
+    shape = ShapeCfg("demo", 64, 4, "train")
+    bundle = make_step_bundle(cfg, shape)
+    src = make_source(cfg, 64)
+
+    def batches(step):
+        return {k: jnp.asarray(v)
+                for k, v in src.batch(step, 0, 4).items()}
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = ElasticTrainer(bundle, batches, ckpt_dir=ckpt_dir,
+                                 ckpt_every=10)
+        trainer.inject_failure(at_step=25)      # node failure mid-run
+        state = bundle.init_fn(jax.random.key(0))
+        state = trainer.run(state, steps=40)
+
+        # "pod loss": rebuild the bundle (here: same 1-device mesh — on
+        # hardware this is the shrunk (data, model) mesh) and reshard
+        state = trainer.rescale(make_step_bundle(cfg, shape), state)
+        state = trainer.run(state, steps=60, start_step=40)
+
+        r = trainer.report
+        print(f"steps run: {r.steps_run}  restarts: {r.restarts}  "
+              f"rescales: {r.rescales}")
+        print(f"loss: {r.losses[0]:.4f} -> {r.losses[-1]:.4f}")
+        print(f"events: {[e[0] for e in r.events]}")
+        assert r.restarts == 1 and r.rescales == 1
+        assert r.losses[-1] < r.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis.roofline import analyze_hlo, roofline_terms, RooflineReport
+
+__all__ = ["analyze_hlo", "roofline_terms", "RooflineReport"]

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, save_tree, restore_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

@@ -1,0 +1,21 @@
+"""stream2gym core: pipeline gym for distributed stream processing.
+
+The paper's primary contribution: a high-level pipeline description API
+(GraphML + YAML or programmatic), a discrete-event emulation engine with a
+replicated-log event streaming substrate, network condition modeling,
+fault injection, and monitoring — adapted to JAX/TPU per DESIGN.md.
+"""
+from repro.core.spec import (
+    PipelineSpec, Component, TopicCfg, FaultCfg, HostSpec, from_graphml,
+    PRODUCER, CONSUMER, BROKER, SPE, STORE,
+)
+from repro.core.netem import Network, LinkCfg, one_big_switch, star
+from repro.core.engine import Engine
+from repro.core.monitor import Monitor
+
+__all__ = [
+    "PipelineSpec", "Component", "TopicCfg", "FaultCfg", "HostSpec",
+    "from_graphml", "Network", "LinkCfg", "one_big_switch", "star",
+    "Engine", "Monitor",
+    "PRODUCER", "CONSUMER", "BROKER", "SPE", "STORE",
+]

@@ -1,0 +1,489 @@
+"""Replicated-log event streaming substrate with Kafka-visible semantics.
+
+The paper's experiments (Figs. 5/6) probe *protocol* behavior of the event
+streaming platform: replication, leader election, ISR management, producer
+retries/timeouts, preferred-replica rebalance, and the ZooKeeper-era
+divergent-log truncation that silently loses messages after a network
+partition heals ([36] in the paper).  This module implements exactly that
+protocol surface over the discrete-event engine:
+
+- **Stale metadata.** Clients (producers/consumers) cache topic→leader
+  metadata and refresh it only through brokers they can reach; brokers keep
+  a leadership *belief* that updates only when the controller can reach
+  them.  A producer co-located with a partitioned leader therefore keeps
+  writing to it for the whole partition — the divergent writes.
+- ``mode="zk"``   — the stale leader accepts those writes (acks=1); after
+  the heal it truncates its divergent suffix to the new leader's log →
+  **silent message loss** (Fig. 6b).
+- ``mode="kraft"``— a leader that cannot reach a replication quorum refuses
+  writes; producers buffer + retry (Kafka's 120 s ``delivery.timeout``)
+  and the messages are delivered after the heal → no loss (the paper
+  "could not observe a similar behavior in Raft-based Kafka").
+
+Brokers are in-memory (the paper's accuracy experiments do not exercise
+disk); logs are per-(broker, topic) lists of ``Record``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+# Protocol timing defaults (seconds); overridable via brokerCfg.
+DEFAULTS = dict(
+    session_timeout=6.0,        # leader-failure detection (ZK session / raft)
+    election_time=2.0,          # leader election duration
+    controller_tick=0.5,
+    request_timeout=2.0,        # producer per-attempt timeout (paper Fig.3a)
+    retry_backoff=0.5,
+    delivery_timeout=120.0,     # Kafka default delivery.timeout.ms
+    rebalance_interval=5.0,     # preferred-replica election check
+    fetch_bytes=1 << 20,
+)
+
+
+@dataclass
+class Record:
+    msg_id: int
+    topic: str
+    payload: Any
+    size: int
+    produce_time: float
+    producer: str
+    offset: int = -1
+    epoch: int = 0
+
+
+@dataclass
+class TopicMeta:
+    name: str
+    replicas: list[str]                  # broker hosts, preferred first
+    leader: str
+    isr: set[str]
+    epoch: int = 0
+    electing_until: float = -1.0         # topic unavailable during election
+    leader_lost_since: Optional[float] = None
+    isr_since: dict = field(default_factory=dict)   # broker -> join time
+
+
+@dataclass
+class _PendingProduce:
+    record: Record
+    producer_host: str
+    first_attempt: float
+    acked: bool = False
+
+
+class ReplicaLog:
+    """One broker's copy of one topic's log."""
+
+    def __init__(self) -> None:
+        self.records: list[Record] = []
+        self.hw: int = 0                 # high watermark (committed offsets)
+
+    @property
+    def leo(self) -> int:                # log end offset
+        return len(self.records)
+
+    def append(self, rec: Record) -> Record:
+        rec = dataclasses.replace(rec, offset=self.leo)
+        self.records.append(rec)
+        return rec
+
+    def truncate_to(self, other: "ReplicaLog") -> list[Record]:
+        """Make this log a copy of ``other``; return locally-lost records."""
+        other_ids = {r.msg_id for r in other.records}
+        lost = [r for r in self.records if r.msg_id not in other_ids]
+        self.records = list(other.records)
+        self.hw = other.hw
+        return lost
+
+
+class Cluster:
+    """Controller + brokers.  All timing flows through ``engine.schedule``."""
+
+    def __init__(self, engine, broker_hosts: list[str], mode: str = "zk",
+                 **cfg) -> None:
+        self.engine = engine
+        self.mode = mode
+        self.cfg = {**DEFAULTS, **{k: v for k, v in cfg.items()
+                                   if k in DEFAULTS}}
+        self.broker_hosts = list(broker_hosts)
+        self.controller_host = self.broker_hosts[0] if broker_hosts else None
+        # logs[broker][topic] -> ReplicaLog
+        self.logs: dict[str, dict[str, ReplicaLog]] = {
+            b: {} for b in broker_hosts}
+        self.topics: dict[str, TopicMeta] = {}
+        self.subs: dict[str, list] = {}          # topic -> consumer comps
+        self._consumer_offsets: dict[tuple[str, str], int] = {}
+        self._pending: dict[int, _PendingProduce] = {}
+        self._msg_seq = 0
+        # client metadata cache: (client_name, topic) -> believed leader
+        self._client_meta: dict[tuple[str, str], str] = {}
+        # broker leadership belief: (broker, topic) -> (is_leader, epoch)
+        self._belief: dict[tuple[str, str], tuple[bool, int]] = {}
+
+    # ------------------------------------------------------------------
+    # Setup
+    # ------------------------------------------------------------------
+
+    def create_topic(self, name: str, leader: Optional[str] = None,
+                     replication: int = 1) -> None:
+        assert self.broker_hosts, "no brokers in the pipeline"
+        leader = leader or self.broker_hosts[
+            len(self.topics) % len(self.broker_hosts)]
+        others = [b for b in self.broker_hosts if b != leader]
+        replicas = [leader] + others[:max(0, replication - 1)]
+        self.topics[name] = TopicMeta(
+            name, replicas, leader, isr=set(replicas))
+        for b in self.broker_hosts:
+            self._belief[(b, name)] = (b == leader, 0)
+        for b in replicas:
+            self.logs[b][name] = ReplicaLog()
+
+    def subscribe(self, consumer, topic: str) -> None:
+        self.subs.setdefault(topic, []).append(consumer)
+        self._consumer_offsets[(topic, consumer.name)] = 0
+
+    def start(self) -> None:
+        self.engine.schedule(self.cfg["controller_tick"],
+                             self._controller_tick)
+
+    # ------------------------------------------------------------------
+    # Client metadata (stale caches refreshed via reachable brokers)
+    # ------------------------------------------------------------------
+
+    def _client_leader(self, client_host: str, client_name: str,
+                       topic: str) -> Optional[str]:
+        key = (client_name, topic)
+        cached = self._client_meta.get(key)
+        if cached is not None:
+            return cached
+        net = self.engine.net
+        for b in self.broker_hosts:       # metadata request to any broker
+            if net.host_up(b) and net.reachable(client_host, b):
+                leader = self.topics[topic].leader
+                self._client_meta[key] = leader
+                return leader
+        return None
+
+    def _invalidate_client(self, client_name: str, topic: str) -> None:
+        self._client_meta.pop((client_name, topic), None)
+
+    # ------------------------------------------------------------------
+    # Produce path
+    # ------------------------------------------------------------------
+
+    def next_msg_id(self) -> int:
+        self._msg_seq += 1
+        return self._msg_seq
+
+    def produce(self, producer_host: str, producer_name: str, topic: str,
+                payload: Any, size: int) -> int:
+        """Producer API.  Returns msg_id; delivery is asynchronous."""
+        now = self.engine.now
+        rec = Record(self.next_msg_id(), topic, payload, size, now,
+                     producer_name)
+        self.engine.monitor.produced(rec)
+        self._pending[rec.msg_id] = _PendingProduce(rec, producer_host, now)
+        self._attempt_produce(rec.msg_id)
+        return rec.msg_id
+
+    def _retry_later(self, msg_id: int) -> None:
+        self.engine.schedule(
+            self.cfg["retry_backoff"] + self.cfg["request_timeout"],
+            lambda: self._attempt_produce(msg_id))
+
+    def _attempt_produce(self, msg_id: int) -> None:
+        eng = self.engine
+        now = eng.now
+        pend = self._pending.get(msg_id)
+        if pend is None or pend.acked:
+            return
+        rec = pend.record
+        if now - pend.first_attempt > self.cfg["delivery_timeout"]:
+            eng.monitor.expired(rec, now)       # producer gives up
+            del self._pending[msg_id]
+            return
+        leader = self._client_leader(pend.producer_host, rec.producer,
+                                     rec.topic)
+        if leader is None:
+            self._retry_later(msg_id)
+            return
+        meta = self.topics[rec.topic]
+        if now < meta.electing_until and leader == meta.leader:
+            self._retry_later(msg_id)
+            return
+        delay, lost = eng.net.transfer(pend.producer_host, leader, rec.size,
+                                       eng.rng)
+        if delay is None or lost:
+            # cached leader unreachable: drop the cache so the next attempt
+            # refreshes metadata through any reachable broker.
+            self._invalidate_client(rec.producer, rec.topic)
+            self._retry_later(msg_id)
+            return
+        eng.schedule(delay, lambda: self._broker_append(leader, msg_id))
+
+    def _broker_append(self, broker: str, msg_id: int) -> None:
+        eng = self.engine
+        pend = self._pending.get(msg_id)
+        if pend is None or pend.acked:
+            return
+        rec = pend.record
+        meta = self.topics[rec.topic]
+        believes, bepoch = self._belief[(broker, rec.topic)]
+        if not believes:
+            # NOT_LEADER response: refresh metadata and retry
+            self._invalidate_client(rec.producer, rec.topic)
+            eng.schedule(self.cfg["retry_backoff"],
+                         lambda: self._attempt_produce(msg_id))
+            return
+        if self.mode == "kraft" and not self._quorum_reachable(broker, meta):
+            # Raft: a leader that cannot reach a quorum refuses the write.
+            self._retry_later(msg_id)
+            return
+        log = self.logs[broker].setdefault(rec.topic, ReplicaLog())
+        rec = log.append(dataclasses.replace(rec, epoch=bepoch))
+        eng.monitor.broker_rx(broker, rec.size)
+        # Kafka default acks=1: ack once the (believed) leader has the
+        # record.  Consumer visibility waits for the high watermark; an
+        # isolated stale leader acks writes that never commit cluster-wide
+        # — those are the Fig. 6b losses after truncation.
+        self._ack(rec)
+        self._maybe_commit(rec.topic)     # single-replica ISR commits here
+        self._replicate(broker, rec)
+
+    def _replicate(self, broker: str, rec: Record) -> None:
+        eng = self.engine
+        meta = self.topics[rec.topic]
+        for b in [x for x in meta.isr if x != broker]:
+            delay, lost = eng.net.transfer(broker, b, rec.size, eng.rng)
+            if delay is None or lost:
+                continue   # follower unreachable; controller manages ISR
+            eng.monitor.broker_tx(broker, rec.size)
+
+            def _deliver(b=b, rec=rec):
+                rl = self.logs[b].setdefault(rec.topic, ReplicaLog())
+                if rl.leo == rec.offset:       # in-order replication only
+                    rl.append(rec)
+                    eng.monitor.broker_rx(b, rec.size)
+                    self._maybe_commit(rec.topic)
+
+            eng.schedule(delay, _deliver)
+
+    def _maybe_commit(self, topic: str) -> None:
+        """Advance HW to min(LEO) over the current ISR."""
+        meta = self.topics[topic]
+        logs = [self.logs[b].get(topic) for b in meta.isr]
+        if any(l is None for l in logs):
+            return
+        hw = min(l.leo for l in logs)
+        for b in meta.isr:
+            rl = self.logs[b][topic]
+            rl.hw = max(rl.hw, min(hw, rl.leo))
+
+    def _ack(self, rec: Record) -> None:
+        pend = self._pending.pop(rec.msg_id, None)
+        if pend is not None:
+            pend.acked = True
+        self.engine.monitor.committed(rec, self.engine.now)
+
+    def _quorum_reachable(self, broker: str, meta: TopicMeta) -> bool:
+        net = self.engine.net
+        live = sum(1 for b in meta.replicas if net.reachable(broker, b))
+        return live > len(meta.replicas) // 2
+
+    # ------------------------------------------------------------------
+    # Fetch path (consumers poll)
+    # ------------------------------------------------------------------
+
+    def fetch(self, consumer, topic: str) -> None:
+        """Poll: asynchronously deliver committed records past the offset."""
+        eng = self.engine
+        meta = self.topics[topic]
+        chost = consumer.host
+        leader = self._client_leader(chost, consumer.name, topic)
+        if leader is None:
+            return
+        if eng.now < meta.electing_until and leader == meta.leader:
+            return
+        rtt, lost = eng.net.transfer(chost, leader, 64, eng.rng)
+        if rtt is None or lost:
+            self._invalidate_client(consumer.name, topic)
+            return
+        if not self._belief[(leader, topic)][0]:
+            self._invalidate_client(consumer.name, topic)   # NOT_LEADER
+            return
+        key = (topic, consumer.name)
+        log = self.logs[leader].get(topic)
+        if log is None:
+            return
+        off = self._consumer_offsets[key]
+        batch = log.records[off:log.hw]         # index == offset per log
+        if not batch:
+            return
+        # fetch.max.bytes: cap one response (remainder on the next poll)
+        limit = self.cfg["fetch_bytes"]
+        total, n = 0, 0
+        for r in batch:
+            total += r.size
+            n += 1
+            if total >= limit:
+                break
+        batch = batch[:n]
+        nbytes = sum(r.size for r in batch)
+        delay, lost = eng.net.transfer(leader, chost, nbytes, eng.rng)
+        if delay is None or lost:
+            return
+        self._consumer_offsets[key] = batch[-1].offset + 1
+        eng.monitor.broker_tx(leader, nbytes)
+
+        def _deliver(batch=tuple(batch)):
+            for r in batch:
+                eng.monitor.delivered(r, consumer.name, eng.now)
+            consumer.on_records(eng, list(batch))
+
+        eng.schedule(rtt + delay, _deliver)
+
+    # ------------------------------------------------------------------
+    # Controller: failure detection, election, ISR, preferred rebalance
+    # ------------------------------------------------------------------
+
+    def _controller_tick(self) -> None:
+        eng = self.engine
+        now = eng.now
+        net = eng.net
+        ctrl = self.controller_host
+        # controller failover: first broker holding a majority view
+        if ctrl is None or not net.host_up(ctrl) \
+                or not self._ctrl_has_majority(ctrl):
+            for b in self.broker_hosts:
+                if net.host_up(b) and self._ctrl_has_majority(b):
+                    ctrl = self.controller_host = b
+                    break
+        for meta in self.topics.values():
+            self._sync_beliefs(meta, ctrl)
+            self._check_leader(meta, ctrl, now)
+            self._manage_isr(meta, ctrl, now)
+            self._preferred_rebalance(meta, ctrl, now)
+        eng.schedule(self.cfg["controller_tick"], self._controller_tick)
+
+    def _ctrl_has_majority(self, host: str) -> bool:
+        net = self.engine.net
+        n = sum(1 for b in self.broker_hosts if net.reachable(host, b))
+        return n > len(self.broker_hosts) // 2
+
+    def _sync_beliefs(self, meta: TopicMeta, ctrl: Optional[str]) -> None:
+        """Brokers reachable from the controller learn the current epoch."""
+        if ctrl is None:
+            return
+        net = self.engine.net
+        for b in self.broker_hosts:
+            if net.reachable(ctrl, b):
+                was_leader, _ = self._belief[(b, meta.name)]
+                is_leader = b == meta.leader
+                self._belief[(b, meta.name)] = (is_leader, meta.epoch)
+                if was_leader and not is_leader:
+                    # deposed leader rejoins: truncate divergence
+                    self._catch_up(b, meta)
+
+    def _check_leader(self, meta: TopicMeta, ctrl: Optional[str],
+                      now: float) -> None:
+        if ctrl is None:
+            return
+        net = self.engine.net
+        if net.reachable(ctrl, meta.leader) and net.host_up(meta.leader):
+            meta.leader_lost_since = None
+            return
+        if meta.leader_lost_since is None:
+            meta.leader_lost_since = now
+            return
+        grace = (self.cfg["session_timeout"] if self.mode == "zk"
+                 else self.cfg["session_timeout"] / 2)
+        if now - meta.leader_lost_since < grace or now < meta.electing_until:
+            return
+        # elect: prefer reachable ISR members; zk may fall back unclean
+        cands = [b for b in meta.replicas
+                 if b != meta.leader and net.reachable(ctrl, b)]
+        isr_cands = [b for b in cands if b in meta.isr]
+        pick = (isr_cands or (cands if self.mode == "zk" else []))
+        if not pick:
+            return
+        new_leader = pick[0]
+        old = meta.leader
+        meta.leader = new_leader
+        meta.epoch += 1
+        meta.isr = {b for b in meta.replicas
+                    if net.reachable(new_leader, b)}
+        meta.isr.add(new_leader)
+        meta.isr.discard(old)
+        meta.electing_until = now + self.cfg["election_time"]
+        meta.leader_lost_since = None
+        self._belief[(new_leader, meta.name)] = (True, meta.epoch)
+        self.engine.monitor.event(now, "leader_elected", topic=meta.name,
+                                  old=old, new=new_leader, epoch=meta.epoch)
+        self.engine.schedule(self.cfg["election_time"],
+                             lambda: self._maybe_commit(meta.name))
+
+    def _manage_isr(self, meta: TopicMeta, ctrl: Optional[str],
+                    now: float) -> None:
+        net = self.engine.net
+        leader = meta.leader
+        if ctrl is None or not net.reachable(ctrl, leader):
+            return      # ISR changes must go through the controller
+        for b in list(meta.isr):
+            if b != leader and not net.reachable(leader, b):
+                meta.isr.discard(b)
+                self._maybe_commit(meta.name)
+                self.engine.monitor.event(now, "isr_shrink",
+                                          topic=meta.name, broker=b)
+        for b in meta.replicas:
+            if b not in meta.isr and net.reachable(leader, b) \
+                    and net.host_up(b):
+                self._catch_up(b, meta)
+                meta.isr.add(b)
+                meta.isr_since[b] = now
+                self.engine.monitor.event(now, "isr_expand",
+                                          topic=meta.name, broker=b)
+
+    def _catch_up(self, b: str, meta: TopicMeta) -> None:
+        """Rejoining replica truncates divergence and copies leader's log.
+
+        zk mode loses the stale leader's partition-era writes here (paper
+        Fig. 6b): records that exist only in the rejoining replica are
+        dropped.
+        """
+        leader_log = self.logs[meta.leader].setdefault(
+            meta.name, ReplicaLog())
+        rl = self.logs[b].setdefault(meta.name, ReplicaLog())
+        if rl is leader_log:
+            return
+        lost = rl.truncate_to(leader_log)
+        nbytes = sum(r.size for r in leader_log.records)
+        if nbytes:
+            self.engine.monitor.broker_tx(meta.leader, nbytes)
+            self.engine.monitor.broker_rx(b, nbytes)
+        for r in lost:
+            if r.epoch < meta.epoch:
+                self.engine.monitor.truncated(r, self.engine.now)
+                self._pending.pop(r.msg_id, None)
+
+    def _preferred_rebalance(self, meta: TopicMeta, ctrl: Optional[str],
+                             now: float) -> None:
+        preferred = meta.replicas[0]
+        stable = (now - meta.isr_since.get(preferred, -1e9)
+                  >= self.cfg["rebalance_interval"])
+        if (meta.leader != preferred and preferred in meta.isr and stable
+                and ctrl is not None
+                and self.engine.net.reachable(ctrl, preferred)
+                and now >= meta.electing_until):
+            old = meta.leader
+            self._catch_up(preferred, meta)
+            meta.leader = preferred
+            meta.epoch += 1
+            self._belief[(preferred, meta.name)] = (True, meta.epoch)
+            self._belief[(old, meta.name)] = (False, meta.epoch)
+            self.engine.monitor.event(now, "preferred_leader_restored",
+                                      topic=meta.name, old=old,
+                                      new=preferred, epoch=meta.epoch)
+            self._maybe_commit(meta.name)

@@ -1,0 +1,55 @@
+"""Fault injection: link failures, host crashes, gray failures.
+
+The engine schedules each ``FaultCfg`` from the spec; ``duration > 0``
+schedules the automatic heal.  Gray failures (paper §III-C) are modeled as
+elevated link loss rather than hard down.
+"""
+from __future__ import annotations
+
+from repro.core.spec import FaultCfg
+
+
+def install(engine, faults: list[FaultCfg]) -> None:
+    for f in faults:
+        engine.schedule(f.at, lambda f=f: _apply(engine, f))
+
+
+def _apply(engine, f: FaultCfg) -> None:
+    net = engine.net
+    mon = engine.monitor
+    t = engine.now
+    if f.kind == "link_down":
+        a, b = f.target
+        net.set_link_up(a, b, False)
+        mon.event(t, "link_down", a=a, b=b)
+        if f.duration:
+            engine.schedule(f.duration, lambda: _heal_link(engine, a, b))
+    elif f.kind == "host_down":
+        (h,) = f.target
+        net.set_host_up(h, False)
+        mon.event(t, "host_down", host=h)
+        if f.duration:
+            engine.schedule(f.duration, lambda: _heal_host(engine, h))
+    elif f.kind == "gray_loss":
+        a, b = f.target
+        link = net.link(a, b)
+        prev = link.loss_pct
+        link.loss_pct = f.loss_pct
+        mon.event(t, "gray_loss", a=a, b=b, loss=f.loss_pct)
+        if f.duration:
+            def _clear():
+                link.loss_pct = prev
+                mon.event(engine.now, "gray_heal", a=a, b=b)
+            engine.schedule(f.duration, _clear)
+    else:
+        raise ValueError(f"unknown fault kind {f.kind!r}")
+
+
+def _heal_link(engine, a: str, b: str) -> None:
+    engine.net.set_link_up(a, b, True)
+    engine.monitor.event(engine.now, "link_up", a=a, b=b)
+
+
+def _heal_host(engine, h: str) -> None:
+    engine.net.set_host_up(h, True)
+    engine.monitor.event(engine.now, "host_up", host=h)

@@ -1,0 +1,181 @@
+"""Network emulation model: links, paths, transfer times, loss.
+
+The paper's Mininet substrate provides per-link latency/bandwidth/loss via
+``tc``/netem.  On a CPU-only container we model the network analytically:
+an undirected topology graph whose edges carry ``LinkCfg``; message delivery
+time = path propagation latency + serialization time at the bottleneck
+link; loss composes per-link Bernoulli draws.  Faults toggle per-link /
+per-host ``up`` flags and reachability is recomputed on demand.
+
+The same module exports the TPU interconnect constants used by the roofline
+analysis (DESIGN.md §7) so that "the network model" has a single home for
+both the pipeline gym and the SPMD collective analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+import networkx as nx
+
+# ---------------------------------------------------------------------------
+# TPU v5e interconnect / chip constants (roofline; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (intra-pod, per direction)
+DCN_BW = 25e9                 # bytes/s per host across pods ("pod" axis)
+ICI_LAT = 1e-6                # seconds, per hop
+DCN_LAT = 10e-6               # seconds
+
+
+@dataclass
+class LinkCfg:
+    """Table I link attributes: lat (ms), bw (Mbps), loss (%), ports."""
+
+    lat_ms: float = 0.1
+    bw_mbps: float = 1_000.0
+    loss_pct: float = 0.0
+    src_port: int = 0
+    dst_port: int = 0
+    up: bool = True
+
+    @property
+    def lat_s(self) -> float:
+        return self.lat_ms * 1e-3
+
+    @property
+    def bw_Bps(self) -> float:
+        return self.bw_mbps * 1e6 / 8.0
+
+
+class Network:
+    """Topology + reachability + message timing."""
+
+    def __init__(self) -> None:
+        self.g = nx.Graph()
+        self._host_up: dict[str, bool] = {}
+        self._paths_dirty = True
+        self._path_cache: dict[tuple[str, str], Optional[list[str]]] = {}
+
+    # --- construction ----------------------------------------------------
+
+    def add_host(self, name: str) -> None:
+        self.g.add_node(name)
+        self._host_up[name] = True
+        self._paths_dirty = True
+
+    def add_link(self, a: str, b: str, cfg: Optional[LinkCfg] = None) -> None:
+        for n in (a, b):
+            if n not in self.g:
+                self.add_host(n)
+        self.g.add_edge(a, b, cfg=cfg or LinkCfg())
+        self._paths_dirty = True
+
+    def link(self, a: str, b: str) -> LinkCfg:
+        return self.g.edges[a, b]["cfg"]
+
+    def hosts(self) -> list[str]:
+        return list(self.g.nodes)
+
+    # --- fault hooks -------------------------------------------------------
+
+    def set_link_up(self, a: str, b: str, up: bool) -> None:
+        self.link(a, b).up = up
+        self._paths_dirty = True
+
+    def set_host_up(self, name: str, up: bool) -> None:
+        self._host_up[name] = up
+        self._paths_dirty = True
+
+    def host_up(self, name: str) -> bool:
+        return self._host_up.get(name, False)
+
+    # --- reachability / timing ---------------------------------------------
+
+    def _live_subgraph(self) -> nx.Graph:
+        live = nx.Graph()
+        for n in self.g.nodes:
+            if self._host_up.get(n, True):
+                live.add_node(n)
+        for a, b, d in self.g.edges(data=True):
+            if d["cfg"].up and live.has_node(a) and live.has_node(b):
+                live.add_edge(a, b, weight=d["cfg"].lat_ms)
+        return live
+
+    def path(self, src: str, dst: str) -> Optional[list[str]]:
+        """Lowest-latency live path, or None if partitioned."""
+        if self._paths_dirty:
+            self._path_cache.clear()
+            self._paths_dirty = False
+        key = (src, dst)
+        if key not in self._path_cache:
+            try:
+                self._path_cache[key] = nx.shortest_path(
+                    self._live_subgraph(), src, dst, weight="weight")
+            except (nx.NetworkXNoPath, nx.NodeNotFound):
+                self._path_cache[key] = None
+        return self._path_cache[key]
+
+    def reachable(self, src: str, dst: str) -> bool:
+        return self.path(src, dst) is not None
+
+    def transfer(self, src: str, dst: str, nbytes: int,
+                 rng: Optional[random.Random] = None
+                 ) -> tuple[Optional[float], bool]:
+        """(delivery_delay_seconds, lost).  delay=None when partitioned.
+
+        delay = sum(per-hop latency) + nbytes / bottleneck_bw; loss is a
+        single Bernoulli draw with the path-composed loss probability.
+        """
+        p = self.path(src, dst)
+        if p is None:
+            return None, True
+        if src == dst:
+            return 0.0, False
+        lat = 0.0
+        bw = math.inf
+        keep = 1.0
+        for a, b in zip(p, p[1:]):
+            cfg = self.link(a, b)
+            lat += cfg.lat_s
+            bw = min(bw, cfg.bw_Bps)
+            keep *= 1.0 - cfg.loss_pct / 100.0
+        delay = lat + (nbytes / bw if bw < math.inf else 0.0)
+        lost = bool(rng and rng.random() > keep)
+        return delay, lost
+
+    def path_latency_s(self, src: str, dst: str) -> Optional[float]:
+        p = self.path(src, dst)
+        if p is None:
+            return None
+        return sum(self.link(a, b).lat_s for a, b in zip(p, p[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Roofline helpers (per-chip interconnect model for the SPMD program)
+# ---------------------------------------------------------------------------
+
+
+def collective_time_s(ici_bytes_per_chip: float,
+                      dcn_bytes_per_chip: float) -> float:
+    """Lower-bound time to move the per-chip collective traffic."""
+    return ici_bytes_per_chip / ICI_BW + dcn_bytes_per_chip / DCN_BW
+
+
+def one_big_switch(hosts: list[str], *, lat_ms: float = 0.1,
+                   bw_mbps: float = 1_000.0, switch: str = "s1") -> Network:
+    """The paper's Fig. 2 'one big switch' abstraction."""
+    net = Network()
+    net.add_host(switch)
+    for h in hosts:
+        net.add_link(h, switch, LinkCfg(lat_ms=lat_ms, bw_mbps=bw_mbps))
+    return net
+
+
+def star(center: str, leaves: list[str], **kw) -> Network:
+    return one_big_switch(leaves, switch=center, **kw)

@@ -1,0 +1,265 @@
+"""PipelineSpec — the paper's high-level modeling interface (Table I).
+
+A stream processing pipeline is a graph: hosts carry components (producers,
+consumers, brokers, stream processing engines, stores), links carry network
+attributes, and graph-level attributes configure topics and faults.  Specs
+can be loaded from GraphML + YAML exactly as in the paper (Fig. 3/4) or
+built programmatically (the tests' and examples' preferred path).
+
+Supported attributes mirror the paper's Table I:
+
+graph:  topicCfg, faultCfg
+node:   prodType/prodCfg, consType/consCfg, streamProcType/streamProcCfg,
+        storeType/storeCfg, brokerCfg, cpuPercentage
+link:   lat (ms), bw (Mbps), loss (%), st, dt (ports)
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import networkx as nx
+import yaml
+
+from repro.core.netem import LinkCfg, Network
+
+# component roles
+PRODUCER = "producer"
+CONSUMER = "consumer"
+BROKER = "broker"
+SPE = "spe"
+STORE = "store"
+
+_ROLES = (PRODUCER, CONSUMER, BROKER, SPE, STORE)
+
+
+@dataclass
+class Component:
+    role: str                      # one of _ROLES
+    type: str = "STANDARD"         # e.g. SFST / DIRECTORY / SPARK / MYSQL
+    cfg: dict[str, Any] = field(default_factory=dict)
+    name: str = ""                 # unique id, assigned by the spec
+
+    def get(self, key: str, default=None):
+        return self.cfg.get(key, default)
+
+
+@dataclass
+class TopicCfg:
+    name: str
+    leader: Optional[str] = None    # preferred leader broker host
+    replication: int = 1
+
+
+@dataclass
+class FaultCfg:
+    """One fault event (Table I ``faultCfg``)."""
+
+    at: float                       # seconds into the run
+    kind: str                       # link_down | host_down | gray_loss
+    target: tuple[str, ...]         # (a, b) for links, (host,) for hosts
+    duration: float = 0.0           # 0 = permanent
+    loss_pct: float = 0.0           # for gray_loss
+
+
+@dataclass
+class HostSpec:
+    name: str
+    components: list[Component] = field(default_factory=list)
+    cpu_percentage: float = 100.0   # Table I cpuPercentage
+    n_cores: int = 8                # emulated host core count
+
+    def by_role(self, role: str) -> list[Component]:
+        return [c for c in self.components if c.role == role]
+
+
+class PipelineSpec:
+    """The full emulation task description."""
+
+    def __init__(self, *, mode: str = "zk") -> None:
+        assert mode in ("zk", "kraft"), mode
+        self.hosts: dict[str, HostSpec] = {}
+        self.topics: dict[str, TopicCfg] = {}
+        self.faults: list[FaultCfg] = []
+        self.network = Network()
+        self.mode = mode            # broker coordination: ZooKeeper vs KRaft
+        self._comp_seq = 0
+
+    # ------------------------------------------------------------------
+    # Builder API
+    # ------------------------------------------------------------------
+
+    def add_host(self, name: str, *, n_cores: int = 8,
+                 cpu_percentage: float = 100.0) -> "PipelineSpec":
+        if name not in self.hosts:
+            self.hosts[name] = HostSpec(name, n_cores=n_cores,
+                                        cpu_percentage=cpu_percentage)
+            self.network.add_host(name)
+        return self
+
+    def add_switch(self, name: str) -> "PipelineSpec":
+        self.network.add_host(name)
+        return self
+
+    def add_link(self, a: str, b: str, *, lat: float = 0.1,
+                 bw: float = 1_000.0, loss: float = 0.0,
+                 st: int = 0, dt: int = 0) -> "PipelineSpec":
+        self.network.add_link(a, b, LinkCfg(
+            lat_ms=lat, bw_mbps=bw, loss_pct=loss, src_port=st, dst_port=dt))
+        return self
+
+    def _add_component(self, host: str, comp: Component) -> Component:
+        self.add_host(host)
+        self._comp_seq += 1
+        comp.name = comp.name or f"{comp.role}{self._comp_seq}@{host}"
+        self.hosts[host].components.append(comp)
+        return comp
+
+    def add_producer(self, host: str, type: str = "SYNTHETIC",
+                     **cfg) -> Component:
+        return self._add_component(host, Component(PRODUCER, type, cfg))
+
+    def add_consumer(self, host: str, type: str = "STANDARD",
+                     **cfg) -> Component:
+        return self._add_component(host, Component(CONSUMER, type, cfg))
+
+    def add_broker(self, host: str, **cfg) -> Component:
+        return self._add_component(host, Component(BROKER, "KAFKA", cfg))
+
+    def add_spe(self, host: str, type: str = "JAXSTREAM", **cfg) -> Component:
+        return self._add_component(host, Component(SPE, type, cfg))
+
+    def add_store(self, host: str, type: str = "KV", **cfg) -> Component:
+        return self._add_component(host, Component(STORE, type, cfg))
+
+    def add_topic(self, name: str, *, leader: Optional[str] = None,
+                  replication: int = 1) -> "PipelineSpec":
+        self.topics[name] = TopicCfg(name, leader, replication)
+        return self
+
+    def add_fault(self, at: float, kind: str, *target: str,
+                  duration: float = 0.0, loss_pct: float = 0.0
+                  ) -> "PipelineSpec":
+        self.faults.append(FaultCfg(at, kind, tuple(target), duration,
+                                    loss_pct))
+        return self
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    def components(self, role: Optional[str] = None) -> list[Component]:
+        out = []
+        for h in self.hosts.values():
+            out.extend(h.components if role is None else h.by_role(role))
+        return out
+
+    def host_of(self, comp: Component) -> str:
+        for h in self.hosts.values():
+            if comp in h.components:
+                return h.name
+        raise KeyError(comp.name)
+
+    def broker_hosts(self) -> list[str]:
+        return [h.name for h in self.hosts.values() if h.by_role(BROKER)]
+
+    def validate(self) -> list[str]:
+        """Static checks mirroring the paper's 'developer friendliness' goal."""
+        problems = []
+        brokers = self.broker_hosts()
+        uses_topics = any(
+            c.get("topic") or c.get("topicName") or c.get("in_topic")
+            or c.get("out_topic") for c in self.components())
+        if (self.topics or uses_topics) and not brokers:
+            problems.append("topics configured but no broker component")
+        for t in self.topics.values():
+            if t.leader is not None and t.leader not in brokers:
+                problems.append(
+                    f"topic {t.name}: leader {t.leader} is not a broker host")
+            if t.replication > max(1, len(brokers)):
+                problems.append(
+                    f"topic {t.name}: replication {t.replication} > "
+                    f"{len(brokers)} brokers")
+        for f in self.faults:
+            if f.kind == "link_down" and len(f.target) != 2:
+                problems.append(f"fault {f}: link_down needs (a, b)")
+            for n in f.target:
+                if n not in self.network.g:
+                    problems.append(f"fault {f}: unknown node {n}")
+        for name, h in self.hosts.items():
+            if brokers and h.components and not any(
+                    self.network.reachable(name, b) for b in brokers):
+                problems.append(f"host {name} cannot reach any broker")
+        return problems
+
+
+# ---------------------------------------------------------------------------
+# GraphML + YAML loading (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def _load_cfg(value: str, base_dir: str) -> dict:
+    """A node attribute either names a YAML file or holds inline YAML."""
+    value = value.strip()
+    path = os.path.join(base_dir, value)
+    if os.path.exists(path):
+        with open(path) as f:
+            return yaml.safe_load(f) or {}
+    parsed = yaml.safe_load(value)
+    return parsed if isinstance(parsed, dict) else {"value": parsed}
+
+
+def from_graphml(path: str, *, mode: str = "zk") -> PipelineSpec:
+    """Parse a paper-style GraphML description (plus side YAML files)."""
+    g = nx.read_graphml(path)
+    base = os.path.dirname(os.path.abspath(path))
+    spec = PipelineSpec(mode=mode)
+
+    # graph-level attributes
+    if "topicCfg" in g.graph:
+        for t in _load_cfg(g.graph["topicCfg"], base).get("topics", []):
+            spec.add_topic(t["name"], leader=t.get("leader"),
+                           replication=int(t.get("replication", 1)))
+    if "faultCfg" in g.graph:
+        for f in _load_cfg(g.graph["faultCfg"], base).get("faults", []):
+            spec.add_fault(
+                float(f["at"]), f["kind"], *f.get("target", []),
+                duration=float(f.get("duration", 0)),
+                loss_pct=float(f.get("loss", 0)))
+
+    for node, attrs in g.nodes(data=True):
+        has_comp = any(k in attrs for k in (
+            "prodType", "consType", "streamProcType", "storeType",
+            "brokerCfg"))
+        if not has_comp:               # switch (paper: <node id="s1"/>)
+            spec.add_switch(node)
+            continue
+        spec.add_host(node, cpu_percentage=float(
+            attrs.get("cpuPercentage", 100.0)))
+        if "prodType" in attrs:
+            cfg = _load_cfg(attrs.get("prodCfg", "{}"), base)
+            spec.add_producer(node, attrs["prodType"], **cfg)
+        if "consType" in attrs:
+            cfg = _load_cfg(attrs.get("consCfg", "{}"), base)
+            spec.add_consumer(node, attrs["consType"], **cfg)
+        if "streamProcType" in attrs:
+            cfg = _load_cfg(attrs.get("streamProcCfg", "{}"), base)
+            spec.add_spe(node, attrs["streamProcType"], **cfg)
+        if "storeType" in attrs:
+            cfg = _load_cfg(attrs.get("storeCfg", "{}"), base)
+            spec.add_store(node, attrs["storeType"], **cfg)
+        if "brokerCfg" in attrs:
+            cfg = _load_cfg(attrs["brokerCfg"], base)
+            spec.add_broker(node, **cfg)
+
+    for a, b, attrs in g.edges(data=True):
+        spec.add_link(
+            a, b,
+            lat=float(attrs.get("lat", 0.1)),
+            bw=float(attrs.get("bw", 1_000.0)),
+            loss=float(attrs.get("loss", 0.0)),
+            st=int(attrs.get("st", 0)),
+            dt=int(attrs.get("dt", 0)),
+        )
+    return spec

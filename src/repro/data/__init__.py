@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    SyntheticLM, ModalityStub, make_train_batches, Prefetcher,
+)
+
+__all__ = ["SyntheticLM", "ModalityStub", "make_train_batches", "Prefetcher"]

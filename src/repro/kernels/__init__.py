@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import flash_attention, flash_decode
+
+__all__ = ["ops", "ref", "flash_attention", "flash_decode"]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These deliberately materialize the full (Sq, Sk) score matrix — they are
+the *semantic* references the kernels are tested against (small shapes
+only), not performance paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _mask(sq: int, sk: int, *, causal: bool, window: int,
+          q_offset: int = 0):
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= qpos >= kpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def attention(q, k, v, *, scale: float, causal: bool = True,
+              window: int = 0, softcap: float = 0.0):
+    """q: (B, Sq, NH, hd); k, v: (B, Sk, KV, hd).  GQA via head groups.
+
+    Returns (B, Sq, NH, hd) in q.dtype; softmax in f32.
+    """
+    B, Sq, NH, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = NH // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    m = _mask(Sq, Sk, causal=causal, window=window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, Sq, NH, hd).astype(q.dtype)
+
+
+def decode(q, k_cache, v_cache, pos, *, scale: float, window: int = 0,
+           softcap: float = 0.0):
+    """q: (B, NH, hd); caches: (B, S, KV, hd); pos: scalar int32.
+
+    Attends to cache positions <= pos (inclusive).  Returns (B, NH, hd).
+    """
+    B, NH, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = NH // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S)[None, :]
+    valid = kpos <= pos
+    if window:
+        valid &= (pos - kpos) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, NH, hd).astype(q.dtype)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, zero_centered: bool = False):
+    """x: (..., D); scale: (D,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    sf = scale.astype(jnp.float32)
+    if zero_centered:
+        sf = 1.0 + sf
+    return (xf * jax.lax.rsqrt(var + eps) * sf).astype(x.dtype)

@@ -1,0 +1,312 @@
+"""GQA attention with rope, soft-capping, sliding windows and KV caches.
+
+Full-sequence attention is computed *chunked over query blocks* (a pure-JAX
+mirror of the Pallas flash kernel's structure): no (S, S) logit tensor is
+ever materialized, so the dry-run memory roofline reflects a flash-style
+deployment rather than a naive O(S^2)-memory one.  On TPU with
+``cfg.use_pallas`` the Pallas kernels in ``repro.kernels`` take over.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import act_constrain
+from repro.models.params import pmeta, dense_init, zeros_init
+
+NEG_INF = -2.0 ** 30
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings.  x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": pmeta(dense_init(ks[0], (d, nh * hd), dt), ("embed", "q_features")),
+        "wk": pmeta(dense_init(ks[1], (d, nkv * hd), dt), ("embed", "kv_features")),
+        "wv": pmeta(dense_init(ks[2], (d, nkv * hd), dt), ("embed", "kv_features")),
+        "wo": pmeta(dense_init(ks[3], (nh * hd, d), dt), ("q_features", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pmeta(zeros_init(None, (nh * hd,), dt), ("q_features",))
+        p["bk"] = pmeta(zeros_init(None, (nkv * hd,), dt), ("kv_features",))
+        p["bv"] = pmeta(zeros_init(None, (nkv * hd,), dt), ("kv_features",))
+    return p
+
+
+def _qk_scale(cfg) -> float:
+    if cfg.query_pre_attn_scalar:
+        return cfg.query_pre_attn_scalar ** -0.5
+    return cfg.head_dim_ ** -0.5
+
+
+def _softcap(logits, cap: float):
+    if cap:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention, chunked over query blocks (flash-style reference)
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, q_offset, cfg, window: int, chunk_positions):
+    """q: (B,Cq,KV,G,hd); k,v: (B,S,KV,hd).  Returns (B,Cq,KV,G,hd)."""
+    scale = _qk_scale(cfg)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q.astype(jnp.float32) * scale,
+        k.astype(jnp.float32))
+    logits = _softcap(logits, cfg.attn_softcap)
+    S = k.shape[1]
+    kv_pos = jnp.arange(S)
+    causal = chunk_positions[:, None] >= kv_pos[None, :]  # (Cq, S)
+    if window:
+        causal &= (chunk_positions[:, None] - kv_pos[None, :]) < window
+    logits = jnp.where(causal[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def _flash_xla(q, k, v, cfg, window: int, *, q_chunk: int = 1024,
+               k_chunk: int = 512):
+    """Flash-style attention in pure XLA: online softmax over k-blocks.
+
+    Unlike the q-chunked reference (which materializes a (Cq, S) prob
+    tile in HBM per chunk), only (Cq, Ck) logit tiles and the (Cq, hd)
+    accumulator live between ops — the XLA analogue of the Pallas
+    kernel's VMEM blocking (§Perf).
+    """
+    B, S, KV, G, hd = q.shape
+    scale = _qk_scale(cfg)
+    nq = max(1, S // q_chunk)
+    while S % nq:
+        nq -= 1
+    Cq = S // nq
+    nk = max(1, S // k_chunk)
+    while S % nk:
+        nk -= 1
+    Ck = S // nk
+
+    kb = jnp.moveaxis(k.reshape(B, nk, Ck, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, Ck, KV, hd), 1, 0)
+
+    def one_q_chunk(args):
+        qi, qc = args                       # qc: (B,Cq,KV,G,hd)
+        qs = qc.astype(jnp.float32) * scale
+        qpos = qi * Cq + jnp.arange(Cq)
+
+        def body(carry, inp):
+            acc, m, l = carry
+            ki, kc, vc = inp                # (B,Ck,KV,hd)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qs,
+                           kc.astype(jnp.float32))
+            s = _softcap(s, cfg.attn_softcap)
+            kpos = ki * Ck + jnp.arange(Ck)
+            mask = qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KV, G, Cq, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, Cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # (B,Cq,KV,G,hd)
+
+    qc = jnp.moveaxis(q.reshape(B, nq, Cq, KV, G, hd), 1, 0)
+    out = jax.lax.map(one_q_chunk, (jnp.arange(nq), qc))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, KV * G, hd)
+
+
+def full_attention(q, k, v, cfg, *, window: int = 0, q_chunk: int = 1024):
+    """q: (B,S,NH,hd), k/v: (B,S,KV,hd) -> (B,S,NH,hd), causal (+window)."""
+    B, S, NH, hd = q.shape
+    KV = k.shape[2]
+    G = NH // KV
+    q = q.reshape(B, S, KV, G, hd)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        # positional args: custom_vjp with nondiff_argnums
+        out = kops.flash_attention(
+            q.reshape(B, S, NH, hd), k, v,
+            _qk_scale(cfg), True, window, cfg.attn_softcap)
+        return out
+    if cfg.attn_impl == "flash_xla":
+        return _flash_xla(q, k, v, cfg, window, q_chunk=q_chunk)
+    if S <= q_chunk:
+        pos = jnp.arange(S)
+        return _attend_chunk(q, k, v, 0, cfg, window, pos).reshape(B, S, NH, hd)
+
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    qc = q.reshape(B, n_chunks, q_chunk, KV, G, hd)
+
+    def one_chunk(i):
+        chunk_positions = i * q_chunk + jnp.arange(q_chunk)
+        return _attend_chunk(
+            qc[:, i], k, v, i * q_chunk, cfg, window, chunk_positions)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # (n,B,Cq,KV,G,hd)
+    out = jnp.moveaxis(out, 0, 1)  # (B,n,Cq,KV,G,hd)
+    return out.reshape(B, S, NH, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, pos, cfg, *, window: int = 0):
+    """q: (B,1,NH,hd); k cache: (B,KV,hd,Smax); v cache: (B,KV,Smax,hd).
+
+    Cache layouts are dot-native (§Perf C2): the q·K logits contract hd
+    with S minor in K, and probs·V contracts S with hd minor in V — no
+    transpose copies of the 32k-token cache per layer.
+    """
+    B, _, NH, hd = q.shape
+    KV, Smax = k_cache.shape[1], k_cache.shape[3]
+    G = NH // KV
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        # the Pallas kernel reads (B, S, KV, hd); views are free on TPU
+        return kops.flash_decode(
+            q[:, 0], jnp.moveaxis(k_cache, 3, 1).swapaxes(2, 3), v_cache.swapaxes(1, 2),
+            pos, scale=_qk_scale(cfg), window=window,
+            softcap=cfg.attn_softcap)[:, None]
+    scale = _qk_scale(cfg)
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgh,bkhs->bkgs", qh,
+                        k_cache.astype(jnp.float32))
+    logits = _softcap(logits, cfg.attn_softcap)
+    kv_pos = jnp.arange(Smax)
+    valid = kv_pos[None, :] <= pos
+    if window:
+        valid &= (pos - kv_pos[None, :]) < window
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs.astype(jnp.float32),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, NH, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block apply (projections + rope + attend + output proj)
+# ---------------------------------------------------------------------------
+
+
+def attn_apply(
+    params, x, cfg, *, local: bool,
+    positions=None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    return_kv: bool = False,
+):
+    """x: (B,S,D).  If cache is given, S must be 1 (decode step).
+
+    With ``return_kv`` (prefill), the full-sequence post-rope K/V are
+    returned as a cache dict alongside the output.
+    """
+    cdt = _dt(cfg.compute_dtype)
+    B, S, D = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    x = x.astype(cdt)
+    q = x @ params["wq"].astype(cdt)
+    k = x @ params["wk"].astype(cdt)
+    v = x @ params["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+    # attention needs the full sequence per head shard: seq deliberately
+    # unsharded here even under sequence parallelism (gather happens at
+    # this boundary; heads shard instead)
+    q = act_constrain(q.reshape(B, S, nh, hd),
+                      ("act_batch", None, "heads", None))
+    k = act_constrain(k.reshape(B, S, nkv, hd),
+                      ("act_batch", None, "kv_heads", None))
+    v = act_constrain(v.reshape(B, S, nkv, hd),
+                      ("act_batch", None, "kv_heads", None))
+
+    window = cfg.sliding_window if local else 0
+
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        out = full_attention(q, k, v, cfg, window=window)
+        new_cache = None
+        if return_kv:       # decode-layout caches (see decode_attention)
+            new_cache = {"k": k.transpose(0, 2, 3, 1),
+                         "v": v.transpose(0, 2, 1, 3)}
+    else:
+        assert S == 1
+        pos = cache_pos  # scalar int32
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.transpose(0, 2, 3, 1).astype(cache["k"].dtype),
+            pos, axis=3)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+            pos, axis=2)
+        out = decode_attention(q, k_cache, v_cache, pos, cfg, window=window)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    out = out.reshape(B, S, nh * hd).astype(cdt)
+    out = out @ params["wo"].astype(cdt)
+    return out, new_cache
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((batch, kv, hd, max_len), dtype),
+            "v": jnp.zeros((batch, kv, max_len, hd), dtype)}
+
+
+def attn_cache_axes() -> dict:
+    return {"k": ("batch", "kv_heads", "head_dim", "cache_seq"),
+            "v": ("batch", "kv_heads", "cache_seq", "head_dim")}

@@ -1,0 +1,105 @@
+"""Core layers: RMSNorm, (gated) MLP, embeddings, logit head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import (
+    ParamMeta, pmeta, dense_init, embed_init, ones_init, zeros_init,
+)
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(key, d: int, cfg) -> dict:
+    return {"scale": pmeta(ones_init(key, (d,), _dt(cfg.param_dtype)), ("embed",))}
+
+
+def rmsnorm(params, x, eps: float, *, zero_centered: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + w) scaling
+        scale = 1.0 + scale
+    return (x * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dt(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": pmeta(dense_init(k1, (d, f), dt), ("embed", "ffn")),
+        "w_down": pmeta(dense_init(k2, (f, d), dt), ("ffn", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = pmeta(dense_init(k3, (d, f), dt), ("embed", "ffn"))
+    return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(params, x, cfg):
+    cdt = _dt(cfg.compute_dtype)
+    x = x.astype(cdt)
+    up = x @ params["w_up"].astype(cdt)
+    if cfg.gated_mlp:
+        gate = _act(cfg.act)(x @ params["w_gate"].astype(cdt))
+        h = gate * up
+    else:
+        h = _act(cfg.act)(up)
+    return h @ params["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logit head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg) -> dict:
+    dt = _dt(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": pmeta(
+        embed_init(k1, (cfg.vocab_size, cfg.d_model), dt), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = pmeta(
+            dense_init(k2, (cfg.d_model, cfg.vocab_size), dt),
+            ("embed", "vocab"))
+    return p
+
+
+def embed(params, tokens, cfg):
+    cdt = _dt(cfg.compute_dtype)
+    x = params["embedding"][tokens].astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
+def logits(params, x, cfg):
+    cdt = _dt(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(cdt).T
+    else:
+        w = params["unembed"].astype(cdt)
+    out = x.astype(cdt) @ w
+    if cfg.final_softcap:
+        cap = cfg.final_softcap
+        out = cap * jnp.tanh(out / cap)
+    return out

@@ -1,0 +1,81 @@
+"""Parameter trees with logical-axis metadata.
+
+Every parameter leaf is created through :func:`pmeta`, carrying a tuple of
+*logical axis names* alongside the array (or ShapeDtypeStruct in dry-run
+mode).  ``unzip`` splits a tree of ParamMeta into a plain value tree plus a
+parallel axes tree; the sharding-rules engine then turns axes trees into
+PartitionSpec trees for any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ParamMeta:
+    """A parameter value tagged with logical axis names (one per dim)."""
+
+    value: Any
+    axes: tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def pmeta(value: Any, axes: tuple[Optional[str], ...]) -> ParamMeta:
+    assert hasattr(value, "ndim") and value.ndim == len(axes), (
+        f"axes {axes} do not match value rank {getattr(value, 'shape', None)}"
+    )
+    return ParamMeta(value, axes)
+
+
+def _is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def unzip(tree):
+    """Split a ParamMeta tree into (values, axes) trees of equal structure."""
+    values = jax.tree.map(lambda m: m.value, tree, is_leaf=_is_meta)
+    axes = jax.tree.map(lambda m: m.axes, tree, is_leaf=_is_meta)
+    return values, axes
+
+
+def stacked_axes(axes_tree, prefix: Optional[str] = None):
+    """Axes tree for params stacked along a new leading (layers) dim."""
+    return jax.tree.map(
+        lambda a: (prefix,) + a, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers.  All initializers take an explicit dtype so the same code
+# path serves real init (jax.random) and dry-run init (inside eval_shape).
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,166 @@
+"""Mamba-1 selective SSM block (jamba-style) with chunked scan.
+
+The selective scan is computed chunk-parallel: ``lax.scan`` over sequence
+chunks carries the (B, d_inner, d_state) recurrent state, and within a chunk
+a ``jax.lax.associative_scan`` runs over the chunk dim.  The materialized
+intermediate is (B, chunk, d_inner, d_state) per step — chunk size bounds
+the working set exactly the way the Pallas kernel's block shape does.
+
+Hardware note (DESIGN.md): mamba-1 has per-(channel, state) decays, so the
+mamba-2-style "matrix transfer" chunking (one matmul per chunk) does not
+apply; the TPU mapping keeps the scan on the VPU with MXU-friendly
+projections around it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import pmeta, dense_init, ones_init, zeros_init
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def init_mamba(key, cfg) -> dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = cfg.d_inner_mamba
+    dtr = m.resolved_dt_rank(d)
+    dt = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # A initialized to -[1..N] per channel (S4D-real init)
+    a_init = jnp.log(jnp.tile(
+        jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None, :], (di, 1)))
+    return {
+        "in_proj": pmeta(dense_init(ks[0], (d, 2 * di), dt), ("embed", "inner")),
+        "conv_w": pmeta(dense_init(ks[1], (m.d_conv, di), dt), ("conv", "inner")),
+        "conv_b": pmeta(zeros_init(None, (di,), dt), ("inner",)),
+        "x_proj": pmeta(dense_init(ks[2], (di, dtr + 2 * m.d_state), dt),
+                        ("inner", "low_rank")),
+        "dt_proj": pmeta(dense_init(ks[3], (dtr, di), dt), ("low_rank", "inner")),
+        "dt_bias": pmeta(zeros_init(None, (di,), dt), ("inner",)),
+        "A_log": pmeta(a_init.astype(jnp.float32), ("inner", "state")),
+        "D": pmeta(ones_init(None, (di,), jnp.float32), ("inner",)),
+        "out_proj": pmeta(dense_init(ks[4], (di, d), dt), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B,S,di), w: (K,di).  cache: (B,K-1,di)."""
+    K = w.shape[0]
+    if cache is not None:
+        x_pad = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = x_pad[:, -(K - 1):] if K > 1 else cache
+    else:
+        x_pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_cache = None
+    out = sum(
+        x_pad[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :], new_cache
+
+
+def _scan_chunk(h0, a, bx):
+    """Associative scan within a chunk.  h0: (B,di,N); a, bx: (B,Q,di,N)."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_c * h0[:, None] + b_c           # (B,Q,di,N)
+    return h, h[:, -1]
+
+
+def selective_scan(x, dt, B_c, C_c, A, D, h0=None, chunk: int = 128):
+    """x, dt: (B,S,di); B_c, C_c: (B,S,N); A: (di,N); D: (di,).
+
+    Returns y (B,S,di) and the final state (B,di,N).
+    """
+    Bsz, S, di = x.shape
+    N = A.shape[1]
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B_c = B_c.astype(jnp.float32)
+    C_c = C_c.astype(jnp.float32)
+
+    a = jnp.exp(dt[..., None] * A[None, None])              # (B,S,di,N)
+    bx = (dt * x)[..., None] * B_c[:, :, None, :]            # (B,S,di,N)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+
+    if S <= chunk:
+        h, h_last = _scan_chunk(h0, a, bx)
+        y = jnp.einsum("bsdn,bsn->bsd", h, C_c)
+    else:
+        assert S % chunk == 0, (S, chunk)
+        n_chunks = S // chunk
+        a_ch = a.reshape(Bsz, n_chunks, chunk, di, N).swapaxes(0, 1)
+        bx_ch = bx.reshape(Bsz, n_chunks, chunk, di, N).swapaxes(0, 1)
+        c_ch = C_c.reshape(Bsz, n_chunks, chunk, N).swapaxes(0, 1)
+
+        def step(h, inp):
+            a_i, bx_i, c_i = inp
+            h_all, h_next = _scan_chunk(h, a_i, bx_i)
+            y_i = jnp.einsum("bsdn,bsn->bsd", h_all, c_i)
+            return h_next, y_i
+
+        h_last, y = jax.lax.scan(step, h0, (a_ch, bx_ch, c_ch))
+        y = y.swapaxes(0, 1).reshape(Bsz, S, di)
+
+    y = y + x * D[None, None, :]
+    return y.astype(dtype), h_last
+
+
+def mamba_apply(params, x, cfg, cache: Optional[dict] = None):
+    """x: (B,S,D).  cache (decode): {"conv": (B,K-1,di), "ssm": (B,di,N)}."""
+    m = cfg.mamba
+    cdt = _dt(cfg.compute_dtype)
+    B, S, D = x.shape
+    di = cfg.d_inner_mamba
+    dtr = m.resolved_dt_rank(D)
+
+    xz = x.astype(cdt) @ params["in_proj"].astype(cdt)       # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(
+        xs, params["conv_w"].astype(cdt), params["conv_b"].astype(cdt),
+        conv_cache)
+    xs = jax.nn.silu(xs)
+
+    bcd = xs @ params["x_proj"].astype(cdt)                  # (B,S,dtr+2N)
+    dt_r, B_c, C_c = jnp.split(bcd, [dtr, dtr + m.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ params["dt_proj"].astype(cdt)
+        + params["dt_bias"].astype(cdt))                     # (B,S,di)
+
+    A = -jnp.exp(params["A_log"])                            # (di,N) f32
+    h0 = cache["ssm"] if cache is not None else None
+    y, h_last = selective_scan(xs, dt, B_c, C_c, A, params["D"], h0=h0)
+
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(cdt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": h_last}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mamba
+    di = cfg.d_inner_mamba
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+def mamba_cache_axes() -> dict:
+    return {
+        "conv": ("batch", "conv", "inner"),
+        "ssm": ("batch", "inner", "state"),
+    }

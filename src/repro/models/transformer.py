@@ -1,0 +1,408 @@
+"""Composable decoder stack: per-layer (mixer, ffn) blocks, scanned groups.
+
+``n_layers`` is split into ``n_groups`` repetitions of the config's layer
+``pattern``; the stack scans over groups (`jax.lax.scan`) so compile time and
+HLO size are independent of depth, with the pattern unrolled inside the scan
+body.  Heterogeneous families (gemma2 local/global, jamba mamba/attn/moe)
+are one pattern each.
+
+The logit/loss head is *chunked over the sequence* with rematerialization:
+full (B, S, vocab) logits are never alive at once — at gemma2's 256k vocab
+and 1M-token batches the naive head would dominate the memory roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Layer
+from repro.distributed.sharding import act_constrain
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.params import ParamMeta, unzip, stacked_axes
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def _zc(cfg) -> bool:
+    # gemma-style (1 + w) zero-centered norm scaling
+    return cfg.embed_scale
+
+
+# ---------------------------------------------------------------------------
+# One layer = norm -> mixer -> (+post-norm) -> residual -> norm -> ffn -> res
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig, layer: Layer) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {"norm1": L.init_rmsnorm(k1, cfg.d_model, cfg)}
+    if layer.mixer in ("attn", "attn_local"):
+        p["mixer"] = attn_mod.init_attn(k2, cfg)
+    elif layer.mixer == "mamba":
+        p["mixer"] = ssm_mod.init_mamba(k2, cfg)
+    elif layer.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(k2, cfg)
+    elif layer.mixer == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(k2, cfg)
+    else:
+        raise ValueError(layer.mixer)
+    if cfg.post_norm:
+        p["post_norm1"] = L.init_rmsnorm(k1, cfg.d_model, cfg)
+    if layer.ffn != "none":
+        p["norm2"] = L.init_rmsnorm(k3, cfg.d_model, cfg)
+        if layer.ffn == "mlp":
+            p["ffn"] = L.init_mlp(k4, cfg)
+        elif layer.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(k4, cfg)
+        else:
+            raise ValueError(layer.ffn)
+        if cfg.post_norm:
+            p["post_norm2"] = L.init_rmsnorm(k3, cfg.d_model, cfg)
+    return p
+
+
+def layer_apply(
+    p, x, cfg: ArchConfig, layer: Layer, *,
+    mode: str,                     # train | prefill | decode
+    positions=None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+):
+    """Returns (x, new_cache, aux)."""
+    aux: dict = {}
+    # pin activation sharding at every block boundary: batch over the DP
+    # axes, seq optionally over "model" (sequence parallelism)
+    x = act_constrain(x, ("act_batch", "act_seq", None))
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps, zero_centered=_zc(cfg))
+
+    mixer_cache = cache.get("mixer") if cache is not None else None
+    if layer.mixer in ("attn", "attn_local"):
+        if mode == "decode":
+            h, new_mixer_cache = attn_mod.attn_apply(
+                p["mixer"], h, cfg, local=layer.mixer == "attn_local",
+                cache=mixer_cache, cache_pos=cache_pos)
+        else:
+            h, new_mixer_cache = attn_mod.attn_apply(
+                p["mixer"], h, cfg, local=layer.mixer == "attn_local",
+                positions=positions, return_kv=mode == "prefill")
+    elif layer.mixer == "mamba":
+        want = mixer_cache
+        if mode == "prefill":
+            want = ssm_mod.init_mamba_cache(cfg, x.shape[0])
+        h, new_mixer_cache = ssm_mod.mamba_apply(p["mixer"], h, cfg, cache=want)
+    elif layer.mixer == "mlstm":
+        h, new_mixer_cache = xlstm_mod.mlstm_apply(
+            p["mixer"], h, cfg, cache=mixer_cache,
+            return_state=mode == "prefill")
+    elif layer.mixer == "slstm":
+        h, new_mixer_cache = xlstm_mod.slstm_apply(
+            p["mixer"], h, cfg, cache=mixer_cache,
+            return_state=mode == "prefill")
+    else:
+        raise ValueError(layer.mixer)
+
+    if cfg.post_norm:
+        h = L.rmsnorm(p["post_norm1"], h, cfg.norm_eps, zero_centered=_zc(cfg))
+    x = x + h
+
+    if layer.ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps, zero_centered=_zc(cfg))
+        if layer.ffn == "mlp":
+            h = L.mlp(p["ffn"], h, cfg)
+        else:
+            h, moe_aux = moe_mod.moe_apply(p["ffn"], h, cfg)
+            aux.update(moe_aux)
+        if cfg.post_norm:
+            h = L.rmsnorm(p["post_norm2"], h, cfg.norm_eps,
+                          zero_centered=_zc(cfg))
+        x = x + h
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"mixer": new_mixer_cache}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Group = one repetition of the pattern (scan unit)
+# ---------------------------------------------------------------------------
+
+
+def init_group(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": init_layer(k, cfg, layer)
+            for i, (k, layer) in enumerate(zip(keys, cfg.pattern))}
+
+
+def group_apply(gp, x, cfg: ArchConfig, *, mode, positions=None,
+                gcache=None, cache_pos=None):
+    aux_sum = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for i, layer in enumerate(cfg.pattern):
+        cache_i = gcache.get(f"l{i}") if gcache is not None else None
+        x, nc, aux = layer_apply(
+            gp[f"l{i}"], x, cfg, layer, mode=mode, positions=positions,
+            cache=cache_i, cache_pos=cache_pos)
+        if nc is not None:
+            new_caches[f"l{i}"] = nc
+        if "moe_aux" in aux:
+            aux_sum = aux_sum + aux["moe_aux"]
+    return x, (new_caches or None), aux_sum
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Functional model wrapper: init + train loss + prefill + decode."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # --- init ----------------------------------------------------------
+
+    def init_params(self, key):
+        """Returns the parameter value tree (arrays)."""
+        cfg = self.cfg
+        k_embed, k_groups, k_final = jax.random.split(key, 3)
+
+        embed_v = unzip(L.init_embed(k_embed, cfg))[0]
+        final_v = unzip(L.init_rmsnorm(k_final, cfg.d_model, cfg))[0]
+
+        def group_values(k):
+            return unzip(init_group(k, cfg))[0]
+
+        gkeys = jax.random.split(k_groups, cfg.n_groups)
+        if cfg.scan_layers:
+            gvals = jax.vmap(group_values)(gkeys)
+        else:
+            gvals = [group_values(k) for k in gkeys]
+        return {"embed": embed_v, "groups": gvals, "final_norm": final_v}
+
+    def param_axes(self):
+        """Logical-axes tree parallel to ``init_params`` output."""
+        cfg = self.cfg
+        key = jax.random.key(0)
+        embed_a = unzip(jax.eval_shape(
+            lambda k: L.init_embed(k, cfg), key))[1]
+        final_a = unzip(jax.eval_shape(
+            lambda k: L.init_rmsnorm(k, cfg.d_model, cfg), key))[1]
+        gaxes0 = unzip(jax.eval_shape(
+            lambda k: init_group(k, cfg), key))[1]
+        if cfg.scan_layers:
+            gaxes = stacked_axes(gaxes0, "layers")
+        else:
+            gaxes = [gaxes0 for _ in range(cfg.n_groups)]
+        return {"embed": embed_a, "groups": gaxes, "final_norm": final_a}
+
+    def param_shapes(self):
+        """Dry-run init: (ShapeDtypeStruct tree, axes tree), no allocation."""
+        values = jax.eval_shape(self.init_params, jax.random.key(0))
+        return values, self.param_axes()
+
+    # --- forward trunk ---------------------------------------------------
+
+    def _embed_inputs(self, params, inputs):
+        cfg = self.cfg
+        if cfg.input_mode == "tokens":
+            return L.embed(params["embed"], inputs, cfg)
+        x = inputs.astype(_dt(cfg.compute_dtype))
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def trunk(self, params, inputs, *, positions=None):
+        """Embed + all blocks + final norm.  Returns (hidden, aux)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, inputs)
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+
+        if cfg.scan_layers:
+            def body(carry, gp):
+                x, aux = carry
+                x, _, a = group_apply(gp, x, cfg, mode="train",
+                                      positions=positions)
+                return (x, aux + a), None
+            body = _remat(body, cfg)
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+
+            def one_group(x, gp):
+                out, _, a = group_apply(gp, x, cfg, mode="train",
+                                        positions=positions)
+                return out, a
+
+            one_group = _remat(one_group, cfg)
+            for gp in params["groups"]:
+                x, a = one_group(x, gp)
+                aux = aux + a
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                      zero_centered=_zc(cfg))
+        return x, aux
+
+    # --- training loss ----------------------------------------------------
+
+    def loss(self, params, batch, *, seq_chunk: int = 512):
+        """batch: {"inputs": (B,S)[int] or (B,S,D)[float], "labels": (B,S)}.
+
+        Cross-entropy is computed in rematerialized sequence chunks so the
+        full (B, S, vocab) logit tensor never materializes.
+        """
+        cfg = self.cfg
+        x, aux = self.trunk(params, batch["inputs"])
+        labels = batch["labels"]
+        B, S = labels.shape
+
+        if cfg.tie_embeddings:
+            w = params["embed"]["embedding"].T
+        else:
+            w = params["embed"]["unembed"]
+        w = w.astype(_dt(cfg.compute_dtype))
+
+        n_chunks = max(1, S // seq_chunk)
+        c = S // n_chunks
+        xc = x.reshape(B, n_chunks, c, -1).swapaxes(0, 1)
+        lc = labels.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_loss(x_i, l_i):
+            logits = x_i @ w  # (B,c,V)
+            # vocab-sharded logits: the full-vocab tensor never lives on
+            # one device; the logsumexp reduces over the model axis
+            logits = act_constrain(logits, ("act_batch", None, "vocab"))
+            if cfg.final_softcap:
+                cap = cfg.final_softcap
+                logits = cap * jnp.tanh(logits / cap)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, l_i[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        def scan_body(tot, inp):
+            return tot + chunk_loss(*inp), None
+
+        total, _ = jax.lax.scan(
+            scan_body, jnp.zeros((), jnp.float32), (xc, lc))
+        ce = total / (B * S)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # --- serving ----------------------------------------------------------
+
+    def prefill(self, params, inputs):
+        """Full-sequence forward; returns (last_logits, cache_tree)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, inputs)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        if cfg.scan_layers:
+            def body(x, gp):
+                x, caches, _ = group_apply(gp, x, cfg, mode="prefill",
+                                           positions=positions)
+                return x, caches
+            x, caches = jax.lax.scan(body, x, params["groups"])
+        else:
+            caches = []
+            for gp in params["groups"]:
+                x, c, _ = group_apply(gp, x, cfg, mode="prefill",
+                                      positions=positions)
+                caches.append(c)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                      zero_centered=_zc(cfg))
+        logits = L.logits(params["embed"], x[:, -1:], cfg)
+        return logits, caches
+
+    def decode_step(self, params, cache, inputs, pos):
+        """inputs: (B,1) tokens or (B,1,D) embeds; pos: scalar int32."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, inputs)
+
+        if cfg.scan_layers:
+            def body(x, inp):
+                gp, gcache = inp
+                x, ncache, _ = group_apply(gp, x, cfg, mode="decode",
+                                           gcache=gcache, cache_pos=pos)
+                return x, ncache
+            x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+        else:
+            new_cache = []
+            for gp, gc in zip(params["groups"], cache):
+                x, nc, _ = group_apply(gp, x, cfg, mode="decode",
+                                       gcache=gc, cache_pos=pos)
+                new_cache.append(nc)
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                      zero_centered=_zc(cfg))
+        logits = L.logits(params["embed"], x, cfg)
+        return logits, new_cache
+
+    # --- caches -------------------------------------------------------------
+
+    def _layer_cache(self, layer: Layer, batch: int, max_len: int, dtype):
+        cfg = self.cfg
+        if layer.mixer in ("attn", "attn_local"):
+            return {"mixer": attn_mod.init_attn_cache(cfg, batch, max_len, dtype)}
+        if layer.mixer == "mamba":
+            return {"mixer": ssm_mod.init_mamba_cache(cfg, batch, dtype)}
+        if layer.mixer == "mlstm":
+            return {"mixer": xlstm_mod.init_mlstm_cache(cfg, batch, dtype)}
+        if layer.mixer == "slstm":
+            return {"mixer": xlstm_mod.init_slstm_cache(cfg, batch, dtype)}
+        raise ValueError(layer.mixer)
+
+    def _layer_cache_axes(self, layer: Layer):
+        if layer.mixer in ("attn", "attn_local"):
+            return {"mixer": attn_mod.attn_cache_axes()}
+        if layer.mixer == "mamba":
+            return {"mixer": ssm_mod.mamba_cache_axes()}
+        if layer.mixer == "mlstm":
+            return {"mixer": xlstm_mod.mlstm_cache_axes()}
+        if layer.mixer == "slstm":
+            return {"mixer": xlstm_mod.slstm_cache_axes()}
+        raise ValueError(layer.mixer)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        group = {f"l{i}": self._layer_cache(layer, batch, max_len, dtype)
+                 for i, layer in enumerate(cfg.pattern)}
+        if cfg.scan_layers:
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (cfg.n_groups,) + x.shape), group)
+        return [group for _ in range(cfg.n_groups)]
+
+    def cache_axes(self):
+        cfg = self.cfg
+        group = {f"l{i}": self._layer_cache_axes(layer)
+                 for i, layer in enumerate(cfg.pattern)}
+        if cfg.scan_layers:
+            return jax.tree.map(
+                lambda a: ("layers",) + a, group,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    e is None or isinstance(e, str) for e in x))
+        return [group for _ in range(cfg.n_groups)]

@@ -1,0 +1,309 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential).
+
+The mLSTM forward uses the stabilized *chunkwise-parallel* form (the same
+recurrence as the official mlstm_chunkwise): within a chunk an (Q, Q)
+decay-weighted attention matrix runs on the MXU, across chunks a scan
+carries the (heads, dh, dh) matrix memory.  This is the TPU-native mapping
+of the paper's CUDA kernels — chunk size plays the role of the kernel block
+shape.  sLSTM is inherently sequential (its recurrent connection breaks
+parallelism) and runs as a ``lax.scan`` over time with per-head
+block-diagonal recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import pmeta, dense_init, ones_init, zeros_init
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner_mlstm
+    H = cfg.n_heads
+    K = cfg.xlstm.conv_dim
+    dt = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": pmeta(dense_init(ks[0], (d, 2 * di), dt), ("embed", "inner")),
+        "conv_w": pmeta(dense_init(ks[1], (K, di), dt), ("conv", "inner")),
+        "conv_b": pmeta(zeros_init(None, (di,), dt), ("inner",)),
+        "wq": pmeta(dense_init(ks[2], (di, di), dt), ("inner", "inner")),
+        "wk": pmeta(dense_init(ks[3], (di, di), dt), ("inner", "inner")),
+        "wv": pmeta(dense_init(ks[4], (di, di), dt), ("inner", "inner")),
+        "w_if": pmeta(dense_init(ks[5], (di, 2 * H), dt), ("inner", "heads")),
+        "b_i": pmeta(zeros_init(None, (H,), jnp.float32), ("heads",)),
+        "b_f": pmeta((jnp.ones((H,)) * 3.0).astype(jnp.float32), ("heads",)),
+        "skip": pmeta(ones_init(None, (di,), dt), ("inner",)),
+        "norm_scale": pmeta(ones_init(None, (di,), dt), ("inner",)),
+        "down_proj": pmeta(dense_init(ks[6], (di, d), dt), ("inner", "embed")),
+    }
+
+
+def _headwise_rmsnorm(h, scale, eps=1e-6):
+    """h: (B,S,H,dh); per-head RMS norm with a flat (di,) scale."""
+    B, S, H, dh = h.shape
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    hn = h.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (hn.reshape(B, S, H * dh) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_scan(q, k, v, logi, logf, state=None, chunk: int = 128):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,dh); logi/logf: (B,S,H) log input/forget gates.
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    Returns h (B,S,H,dh) and final state.
+    """
+    B, S, H, dh = q.shape
+    f32 = jnp.float32
+    q = q.astype(f32) * (dh ** -0.5)
+    k = k.astype(f32)
+    v = v.astype(f32)
+    logi = logi.astype(f32)
+    logf = logf.astype(f32)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), f32)
+        n0 = jnp.zeros((B, H, dh), f32)
+        m0 = jnp.full((B, H), -1e30, f32)
+    else:
+        C0, n0, m0 = state
+
+    assert S % chunk == 0 or S < chunk, (S, chunk)
+    Q = min(chunk, S)
+    n_chunks = S // Q
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, li, lf = inp  # (B,Q,H,dh) / (B,Q,H)
+        b = jnp.cumsum(lf, axis=1)                      # (B,Q,H) inclusive
+        g = jax.lax.cummax(li - b, axis=1)              # running max of i-b
+        m_t = b + jnp.maximum(m[:, None], g)            # (B,Q,H) row stabilizer
+        # inter-chunk: q_t . C_prev, scaled
+        inter_scale = jnp.exp(b + m[:, None] - m_t)     # (B,Q,H)
+        num_inter = jnp.einsum("bqhd,bhde->bqhe", qc, C) * inter_scale[..., None]
+        den_inter = jnp.einsum("bqhd,bhd->bqh", qc, n) * inter_scale
+        # intra-chunk decay matrix: D[t,s] = exp(b_t - b_s + i_s - m_t), s<=t
+        dmat = (b[:, :, None] - b[:, None, :]
+                + li[:, None, :] - m_t[:, :, None])     # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        dexp = jnp.exp(dmat)
+        scores = jnp.einsum("bqhd,bshd->bqsh", qc, kc) * dexp
+        num = num_inter + jnp.einsum("bqsh,bshd->bqhd", scores, vc)
+        den = den_inter + jnp.sum(scores, axis=2)       # (B,Q,H)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update (to end of chunk)
+        bQ = b[:, -1]                                   # (B,H)
+        m_new = bQ + jnp.maximum(m, g[:, -1])
+        c_scale = jnp.exp(bQ + m - m_new)               # (B,H)
+        k_scale = jnp.exp(bQ[:, None] - b + li - m_new[:, None])  # (B,Q,H)
+        C_new = (C * c_scale[..., None, None]
+                 + jnp.einsum("bqhd,bqhe->bhde", kc * k_scale[..., None], vc))
+        n_new = (n * c_scale[..., None]
+                 + jnp.sum(kc * k_scale[..., None], axis=1))
+        return (C_new, n_new, m_new), h
+
+    def to_chunks(x):
+        return x.reshape((B, n_chunks, Q) + x.shape[2:]).swapaxes(0, 1)
+
+    inps = tuple(map(to_chunks, (q, k, v, logi, logf)))
+    (C, n, m), h = jax.lax.scan(chunk_step, (C0, n0, m0), inps)
+    h = h.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h, (C, n, m)
+
+
+def mlstm_decode_step(q, k, v, logi, logf, state):
+    """One-token mLSTM update.  q,k,v: (B,H,dh); logi/logf: (B,H)."""
+    C, n, m = state
+    f32 = jnp.float32
+    dh = q.shape[-1]
+    q = q.astype(f32) * (dh ** -0.5)
+    k = k.astype(f32)
+    v = v.astype(f32)
+    m_new = jnp.maximum(logf + m, logi)
+    f_sc = jnp.exp(logf + m - m_new)
+    i_sc = jnp.exp(logi - m_new)
+    C_new = C * f_sc[..., None, None] + jnp.einsum(
+        "bhd,bhe->bhde", k * i_sc[..., None], v)
+    n_new = n * f_sc[..., None] + k * i_sc[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply(params, x, cfg, cache: Optional[dict] = None,
+                return_state: bool = False):
+    """x: (B,S,D).  cache: {"conv": (B,K-1,di), "C","n","m"}."""
+    cdt = _dt(cfg.compute_dtype)
+    B, S, D = x.shape
+    di = cfg.d_inner_mlstm
+    H = cfg.n_heads
+    dh = di // H
+
+    xz = x.astype(cdt) @ params["up_proj"].astype(cdt)
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    from repro.models.ssm import _causal_conv
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(
+        xm, params["conv_w"].astype(cdt), params["conv_b"].astype(cdt),
+        conv_cache)
+    xc = jax.nn.silu(xc)
+
+    q = (xc @ params["wq"].astype(cdt)).reshape(B, S, H, dh)
+    k = (xc @ params["wk"].astype(cdt)).reshape(B, S, H, dh)
+    v = (xm @ params["wv"].astype(cdt)).reshape(B, S, H, dh)
+    gates = (xm @ params["w_if"].astype(cdt)).astype(jnp.float32)
+    logi = gates[..., :H] + params["b_i"][None, None]
+    logf = jax.nn.log_sigmoid(gates[..., H:] + params["b_f"][None, None])
+
+    if cache is None:
+        h, (C, n, m) = mlstm_scan(q, k, v, logi, logf)
+        if return_state:
+            K = cfg.xlstm.conv_dim
+            new_conv = xm[:, -(K - 1):].astype(cdt)
+    else:
+        state = (cache["C"], cache["n"], cache["m"])
+        h, (C, n, m) = mlstm_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], logi[:, 0], logf[:, 0], state)
+        h = h[:, None]
+
+    h = _headwise_rmsnorm(h.astype(cdt), params["norm_scale"])
+    h = h + params["skip"].astype(cdt)[None, None] * xc
+    out = (h * jax.nn.silu(z)) @ params["down_proj"].astype(cdt)
+    if cache is None and not return_state:
+        return out, None
+    return out, {"conv": new_conv, "C": C, "n": n, "m": m}
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    di = cfg.d_inner_mlstm
+    H = cfg.n_heads
+    dh = di // H
+    K = cfg.xlstm.conv_dim
+    return {
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_cache_axes() -> dict:
+    return {
+        "conv": ("batch", "conv", "inner"),
+        "C": ("batch", "heads", "head_dim", "head_dim"),
+        "n": ("batch", "heads", "head_dim"),
+        "m": ("batch", "heads"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    hf = int(cfg.xlstm.slstm_proj_factor * d)
+    dt = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for gates (i, f, z, o)
+        "w": pmeta(dense_init(ks[0], (d, 4 * d), dt), ("embed", "inner")),
+        # block-diagonal (per-head) recurrent weights for 4 gates
+        "r": pmeta(dense_init(ks[1], (4, H, dh, dh), jnp.float32, scale=0.05),
+                   (None, "heads", "head_dim", "head_dim")),
+        "b": pmeta(
+            jnp.concatenate([
+                jnp.zeros((d,)), jnp.ones((d,)) * 3.0,
+                jnp.zeros((d,)), jnp.zeros((d,))]).astype(jnp.float32),
+            ("inner",)),
+        "norm_scale": pmeta(ones_init(None, (d,), dt), ("embed",)),
+        "ffn_up": pmeta(dense_init(ks[2], (d, hf), dt), ("embed", "ffn")),
+        "ffn_down": pmeta(dense_init(ks[3], (hf, d), dt), ("ffn", "embed")),
+    }
+
+
+def _slstm_cell(carry, wx, r):
+    """One sLSTM step.  wx: (B,4,H,dh) pre-activations from the input path."""
+    c, n, h, m = carry  # each (B,H,dh) except m (B,H,dh)
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (B,4,H,dh)
+    pre = wx + rec
+    i_raw, f_raw, z_raw, o_raw = [pre[:, g] for g in range(4)]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_sc = jnp.exp(i_raw - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(z_raw)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, x, cfg, cache: Optional[dict] = None,
+                return_state: bool = False):
+    """x: (B,S,D).  Sequential scan over time (sLSTM is not parallelizable)."""
+    cdt = _dt(cfg.compute_dtype)
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+
+    wx = (x.astype(cdt) @ params["w"].astype(cdt)).astype(jnp.float32)
+    wx = wx + params["b"][None, None]
+    wx = wx.reshape(B, S, 4, H, dh)
+    r = params["r"]
+
+    if cache is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30))
+    else:
+        carry0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    def step(carry, wx_t):
+        new = _slstm_cell(carry, wx_t, r)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(cdt)
+
+    # post-norm + gelu FFN (sLSTM block's post up/down projection)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), -1, keepdims=True)
+    hn = (h.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+          * params["norm_scale"].astype(jnp.float32)).astype(cdt)
+    out = jax.nn.gelu(hn @ params["ffn_up"].astype(cdt)) @ params[
+        "ffn_down"].astype(cdt)
+
+    new_cache = None
+    if cache is not None or return_state:
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30)}
+
+
+def slstm_cache_axes() -> dict:
+    axes = ("batch", "heads", "head_dim")
+    return {"c": axes, "n": axes, "h": axes, "m": axes}

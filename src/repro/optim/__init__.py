@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamW, OptConfig, global_norm, clip_by_global_norm
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compress import (
+    quantize_int8, dequantize_int8, compressed_pod_allreduce, ef_init,
+)
+
+__all__ = [
+    "AdamW", "OptConfig", "global_norm", "clip_by_global_norm",
+    "cosine_warmup", "quantize_int8", "dequantize_int8",
+    "compressed_pod_allreduce", "ef_init",
+]

@@ -1,0 +1,88 @@
+"""AdamW over arbitrary parameter trees with dtype-configurable state.
+
+State dtypes follow ``ArchConfig.opt_dtype`` (f32 default; bf16 for the
+400B llama4 config so optimizer state fits the single-pod HBM budget —
+see DESIGN.md §Arch-applicability).  All ops are tree-mapped ``jnp``;
+under pjit the states inherit the parameter shardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+class AdamW:
+    def __init__(self, cfg: OptConfig,
+                 lr_fn: Optional[Callable] = None) -> None:
+        self.cfg = cfg
+        self.lr_fn = lr_fn or (lambda step: cfg.lr)
+
+    def init(self, params) -> dict:
+        dt = jnp.dtype(self.cfg.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, opt_state, params) -> tuple[Any, dict]:
+        """Returns (new_params, new_opt_state)."""
+        c = self.cfg
+        step = opt_state["step"] + 1
+        if c.clip_norm:
+            grads, _ = clip_by_global_norm(grads, c.clip_norm)
+        sdt = jnp.dtype(c.state_dtype)
+        stepf = step.astype(jnp.float32)
+        bc1 = 1.0 - c.b1 ** stepf
+        bc2 = 1.0 - c.b2 ** stepf
+        lr = self.lr_fn(step)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * c.b1 + (1 - c.b1) * g32
+            v32 = v.astype(jnp.float32) * c.b2 + (1 - c.b2) * g32 * g32
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + c.eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (delta + c.weight_decay * p32)
+            return p32.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, opt_state["m"],
+                           opt_state["v"])
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,66 @@
+"""int8 gradient compression with error feedback for cross-pod all-reduce.
+
+Across the DCN ("pod") axis, gradients are quantized to int8 with a
+per-tensor scale, exchanged with ``all_gather`` (wire format stays int8 —
+4x fewer DCN bytes than an f32 psum), dequantized and averaged locally.
+Quantization error is carried in an error-feedback buffer and added to the
+next step's gradient, which keeps SGD/Adam convergence unbiased in the
+long run (Karimireddy et al., 2019).
+
+Intra-pod (ICI) reductions stay uncompressed: at ~50 GB/s/link the ICI
+collective term is rarely dominant, and compression there would add
+quantization noise for no roofline win (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_init(grads) -> Any:
+    """Zero error-feedback buffers shaped like the gradient tree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_pod_allreduce(grads, ef, axis_name: str = "pod"):
+    """Inside shard_map: average per-pod grads over ``axis_name`` in int8.
+
+    grads: per-pod gradient tree (already reduced within the pod).
+    ef:    error-feedback tree from the previous step.
+    Returns (averaged_grads, new_ef).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        new_e = g32 - dequantize_int8(q, scale)
+        # wire: int8 payload + f32 scale per tensor
+        qs = jax.lax.all_gather(q, axis_name)            # (pods, ...)
+        scales = jax.lax.all_gather(scale, axis_name)    # (pods,)
+        deq = jnp.tensordot(scales.astype(jnp.float32),
+                            qs.astype(jnp.float32), axes=1)
+        return (deq / n).astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, ef)
+    avg = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return avg, new_ef

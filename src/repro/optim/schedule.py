@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to ``min_ratio * base_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup_steps)
+        prog = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

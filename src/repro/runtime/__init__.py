@@ -1,0 +1,3 @@
+from repro.runtime.driver import ElasticTrainer, TrainReport
+
+__all__ = ["ElasticTrainer", "TrainReport"]

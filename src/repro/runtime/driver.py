@@ -1,0 +1,137 @@
+"""Fault-tolerant elastic training driver.
+
+The driver owns the loop the launcher runs: data pipeline → train_step →
+metrics, with
+
+- **checkpoint/restart**: async sharded checkpoints every N steps; on any
+  step failure the driver restores the latest checkpoint and replays from
+  there (the data pipeline is seeded per (step, rank), so replay is exact);
+- **elastic rescale**: ``rescale(new_mesh)`` re-resolves shardings for the
+  surviving mesh and ``device_put``s the restored state onto it — losing a
+  pod shrinks (pod, data, model) → (data, model) without losing progress;
+- **straggler mitigation**: per-step wall times feed an online P95
+  estimate; steps exceeding ``straggler_factor × P95`` are *recorded* (on
+  real multi-host hardware the companion policy is backup-worker
+  dispatch; on a single-process runtime we surface detection + the
+  hook).  Fault injection for tests/examples goes through
+  ``inject_failure``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.train.steps import StepBundle
+
+
+@dataclass
+class TrainReport:
+    steps_run: int = 0
+    restarts: int = 0
+    rescales: int = 0
+    losses: list = field(default_factory=list)
+    straggler_steps: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+
+
+class ElasticTrainer:
+    def __init__(self, bundle: StepBundle, batches: Callable[[int], dict],
+                 *, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 straggler_factor: float = 3.0,
+                 log_every: int = 10,
+                 log_fn: Callable[[str], None] = print):
+        self.bundle = bundle
+        self.batches = batches          # step -> host batch dict
+        self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.log_every = log_every
+        self.log = log_fn
+        self.report = TrainReport()
+        self._fail_at: Optional[int] = None
+        self._step_fn = None
+        self._compile()
+
+    def _compile(self):
+        b = self.bundle
+        self._step_fn = jax.jit(b.step_fn, in_shardings=b.in_shardings,
+                                out_shardings=b.out_shardings,
+                                donate_argnums=(0,))
+
+    # --- fault injection (tests/examples) ---------------------------------
+
+    def inject_failure(self, at_step: int) -> None:
+        self._fail_at = at_step
+
+    # --- elastic ------------------------------------------------------------
+
+    def rescale(self, new_bundle: StepBundle, state) -> Any:
+        """Re-shard state onto a new mesh (e.g. after losing a pod)."""
+        self.bundle = new_bundle
+        self._compile()
+        if new_bundle.mesh is None or new_bundle.in_shardings is None:
+            self.report.rescales += 1
+            return state
+        shardings = new_bundle.in_shardings[0]
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), state, shardings)
+        self.report.rescales += 1
+        self.report.events.append(("rescale", new_bundle.mesh.shape))
+        return state
+
+    # --- main loop ------------------------------------------------------------
+
+    def run(self, state, *, steps: int, start_step: int = 0):
+        step = start_step
+        template = jax.eval_shape(lambda: state)   # survives donation
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            step, state = self.ckpt.restore(template)
+            self.log(f"[driver] resumed from checkpoint step {step}")
+        times: list[float] = []
+        while step < steps:
+            batch = self.batches(step)
+            try:
+                if self._fail_at is not None and step == self._fail_at:
+                    self._fail_at = None
+                    raise RuntimeError(f"injected failure at step {step}")
+                t0 = time.perf_counter()
+                state, metrics = self._step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+            except Exception as e:                       # noqa: BLE001
+                self.report.events.append(("failure", step, repr(e)))
+                if self.ckpt is None or self.ckpt.latest_step() is None:
+                    raise
+                self.log(f"[driver] step {step} failed ({e}); restoring")
+                step, state = self.ckpt.restore(
+                    template,
+                    self.bundle.in_shardings[0]
+                    if self.bundle.in_shardings else None)
+                self.report.restarts += 1
+                continue
+
+            # straggler detection (online P95)
+            times.append(dt)
+            if len(times) > 8:
+                p95 = float(np.percentile(times[-64:], 95))
+                if dt > self.straggler_factor * p95 and len(times) > 16:
+                    self.report.straggler_steps.append(step)
+                    self.report.events.append(("straggler", step, dt, p95))
+
+            self.report.losses.append(loss)
+            self.report.steps_run += 1
+            step += 1
+            if step % self.log_every == 0:
+                self.log(f"[driver] step {step}: loss {loss:.4f} "
+                         f"({dt*1e3:.0f} ms)")
+            if self.ckpt is not None and step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        if self.ckpt is not None:
+            self.ckpt.save(steps, state)
+            self.ckpt.wait()
+        return state

@@ -1,0 +1,6 @@
+from repro.train.steps import (
+    StepBundle, make_step_bundle, train_input_specs, serve_input_specs,
+)
+
+__all__ = ["StepBundle", "make_step_bundle", "train_input_specs",
+           "serve_input_specs"]

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device; only launch/dryrun.py (and the subprocess test) force 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,98 @@
+"""Broker protocol invariants: offsets, HW, replication, delivery."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Engine, PipelineSpec
+
+
+def star_spec(n_brokers=3, replication=3, mode="zk", n_msgs=10,
+              consumers=1):
+    spec = PipelineSpec(mode=mode)
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, n_brokers + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(h)
+    spec.add_host("p").add_link("p", "s1", lat=1.0, bw=100.0)
+    spec.add_topic("t", leader="h1", replication=replication)
+    spec.add_producer("p", "SYNTHETIC", topics=["t"], rateKbps=50.0,
+                      msgSize=500, totalMessages=n_msgs)
+    for i in range(consumers):
+        spec.add_host(f"c{i}").add_link(f"c{i}", "s1", lat=1.0, bw=100.0)
+        spec.add_consumer(f"c{i}", "STANDARD", topics=["t"],
+                          pollInterval=0.2)
+    return spec
+
+
+def test_all_messages_delivered_no_faults():
+    eng = Engine(star_spec(n_msgs=20, consumers=2), seed=0)
+    mon = eng.run(until=60.0)
+    consumers = eng.consumers_named()
+    rep = mon.loss_report(consumers)
+    assert rep["total"] == 20
+    assert rep["fully_delivered"] == 20
+    assert rep["truncated"] == 0 and rep["expired"] == 0
+
+
+def test_offsets_contiguous_and_replicas_prefix():
+    eng = Engine(star_spec(n_msgs=15), seed=1)
+    eng.run(until=60.0)
+    cluster = eng.cluster
+    leader_log = cluster.logs[cluster.topics["t"].leader]["t"]
+    offs = [r.offset for r in leader_log.records]
+    assert offs == list(range(len(offs)))          # dense, monotone
+    assert leader_log.hw == leader_log.leo          # fully committed
+    lead_ids = [r.msg_id for r in leader_log.records]
+    for b in cluster.topics["t"].replicas:
+        rl = cluster.logs[b]["t"]
+        ids = [r.msg_id for r in rl.records]
+        assert ids == lead_ids[:len(ids)]           # replica = prefix
+
+
+def test_delivery_in_offset_order():
+    eng = Engine(star_spec(n_msgs=25), seed=2)
+    mon = eng.run(until=90.0)
+    # per consumer, delivery times must be sorted by offset
+    consumer = eng.consumers_named()[0]
+    pairs = []
+    leader_log = eng.cluster.logs[eng.cluster.topics["t"].leader]["t"]
+    for rec in leader_log.records:
+        stat = mon.msgs[rec.msg_id]
+        if consumer in stat.deliveries:
+            pairs.append((rec.offset, stat.deliveries[consumer]))
+    times = [t for _, t in sorted(pairs)]
+    assert times == sorted(times)
+
+
+def test_latency_positive_and_bounded():
+    eng = Engine(star_spec(n_msgs=10), seed=3)
+    mon = eng.run(until=60.0)
+    for _, lat in mon.latencies(topic="t"):
+        assert 0 < lat < 5.0          # no faults: low single-digit seconds
+
+
+@given(st.integers(1, 3), st.integers(0, 6), st.integers(1, 30))
+@settings(max_examples=12, deadline=None)
+def test_invariants_random_configs(replication, extra_consumers, n_msgs):
+    spec = star_spec(n_brokers=3, replication=replication, n_msgs=n_msgs,
+                     consumers=1 + extra_consumers)
+    eng = Engine(spec, seed=n_msgs)
+    mon = eng.run(until=80.0)
+    # INVARIANT 1: delivered set ⊆ produced set, each delivered once
+    for m in mon.msgs.values():
+        assert len(m.deliveries) <= 1 + extra_consumers + 0  # consumers only
+    # INVARIANT 2: without faults nothing is truncated
+    assert all(m.truncated_time is None for m in mon.msgs.values())
+    # INVARIANT 3: every consumer's received count == produced count
+    rep = mon.loss_report(eng.consumers_named())
+    assert rep["fully_delivered"] == rep["total"] == n_msgs
+
+
+def test_spec_validation_catches_missing_broker():
+    spec = PipelineSpec()
+    spec.add_host("a")
+    spec.add_producer("a", "SYNTHETIC", topic="t")
+    spec.add_topic("t")
+    with pytest.raises(ValueError):
+        Engine(spec)

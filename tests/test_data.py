@@ -1,0 +1,56 @@
+"""Data pipeline determinism and rank-disjointness."""
+import numpy as np
+
+from repro.data import ModalityStub, Prefetcher, SyntheticLM
+from repro.data.pipeline import make_train_batches
+
+
+def test_deterministic_per_seed_step_rank():
+    src = SyntheticLM(1000, 64, seed=3)
+    a = src.batch(5, 2, 4)
+    b = src.batch(5, 2, 4)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    c = src.batch(6, 2, 4)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+    d = src.batch(5, 3, 4)
+    assert not np.array_equal(a["inputs"], d["inputs"])
+
+
+def test_labels_are_shifted_inputs():
+    src = SyntheticLM(1000, 64, seed=0)
+    b = src.batch(0, 0, 2)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+    assert b["inputs"].shape == (2, 64)
+    assert b["inputs"].max() < 1000 and b["inputs"].min() >= 0
+
+
+def test_modality_stub_shapes():
+    stub = ModalityStub(256, 32, vocab_size=512)
+    b = stub.batch(0, 0, 3)
+    assert b["inputs"].shape == (3, 32, 256)
+    assert b["inputs"].dtype == np.float32
+    assert b["labels"].shape == (3, 32)
+
+
+def test_elastic_replay_consistency():
+    """Replaying a step after rescale yields the same global batch."""
+    from repro.configs import get_config, reduce_for_smoke
+    cfg = reduce_for_smoke(get_config("qwen2-7b"))
+    # world=4: gather the 4 rank batches
+    its = [make_train_batches(cfg, 32, 8, rank=r, world=4, start_step=17)
+           for r in range(4)]
+    parts = [next(it) for it in its]
+    # same steps re-created from scratch (e.g. after a restart)
+    its2 = [make_train_batches(cfg, 32, 8, rank=r, world=4, start_step=17)
+            for r in range(4)]
+    parts2 = [next(it) for it in its2]
+    for a, b in zip(parts, parts2):
+        np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    # ranks are disjoint streams
+    assert not np.array_equal(parts[0]["inputs"], parts[1]["inputs"])
+
+
+def test_prefetcher_order_preserved():
+    it = iter([{"x": np.full((2,), i)} for i in range(10)])
+    out = [b["x"][0] for b in Prefetcher(it, depth=3)]
+    assert out == list(range(10))

@@ -1,0 +1,133 @@
+"""Per-arch smoke: every assigned architecture trains + serves at reduced
+scale with finite outputs and the right shapes (deliverable f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs, reduce_for_smoke
+from repro.configs.base import SHAPES, ShapeCfg
+from repro.models import Model
+from repro.train import make_step_bundle
+
+ARCHS = list_configs()
+
+
+@pytest.fixture(scope="module")
+def batchgen():
+    rng = np.random.default_rng(0)
+
+    def make(cfg, B=2, S=32):
+        if cfg.input_mode == "tokens":
+            inputs = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32))
+        else:
+            inputs = jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)),
+                                 jnp.float32)
+        labels = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32))
+        return {"inputs": inputs, "labels": labels}
+    return make
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_numbers(arch):
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    assert n > 0
+    assert cfg.n_active_params() <= n
+    assert cfg.n_layers % len(cfg.pattern) == 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, batchgen):
+    cfg = reduce_for_smoke(get_config(arch))
+    shape = ShapeCfg("smoke", 32, 2, "train")
+    b = make_step_bundle(cfg, shape)
+    state = b.init_fn(jax.random.key(0))
+    batch = batchgen(cfg)
+    step = jax.jit(b.step_fn)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert jnp.isfinite(m2["loss"])
+    assert float(m2["loss"]) < float(m1["loss"]) + 0.5
+    assert int(m2["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_shapes(arch, batchgen):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(1))
+    B, S = 2, 16
+    batch = batchgen(cfg, B, S)
+    logits, cache = jax.jit(model.prefill)(params, batch["inputs"])
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    # one decode step against a fresh max-length cache
+    dcache = model.init_cache(B, S + 8, jnp.float32)
+    tok = (jnp.argmax(logits[:, -1], -1)[:, None]
+           if cfg.input_mode == "tokens"
+           else batch["inputs"][:, :1])
+    dl, new_cache = jax.jit(model.decode_step)(
+        params, dcache, tok, jnp.int32(S))
+    assert dl.shape == (B, 1, cfg.vocab_size)
+    assert jnp.isfinite(dl).all()
+    # cache tree structure preserved
+    assert jax.tree.structure(dcache) == jax.tree.structure(new_cache)
+
+
+def test_prefill_decode_consistency():
+    """Decode at position S must match a fresh prefill of S+1 tokens."""
+    from repro.core.spe import _merge_prefill_cache
+    cfg = reduce_for_smoke(get_config("qwen2-7b"))
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              param_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(2))
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 17),
+                                    dtype=np.int32))
+    # path A: prefill all 17
+    la, _ = jax.jit(model.prefill)(params, toks)
+    # path B: prefill 16, merge into a max-len cache, decode token 16
+    lb, pc = jax.jit(model.prefill)(params, toks[:, :16])
+    full = model.init_cache(1, 32, jnp.float32)
+    cache = _merge_prefill_cache(full, pc, 16)
+    ld, _ = jax.jit(model.decode_step)(params, cache, toks[:, 16:17],
+                                       jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(la[:, -1]), np.asarray(ld[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gemma2_softcap_applied():
+    cfg = reduce_for_smoke(get_config("gemma2-2b"))
+    assert cfg.attn_softcap == 50.0 and cfg.final_softcap == 30.0
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    toks = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = jax.jit(model.prefill)(params, toks)
+    assert float(jnp.max(jnp.abs(logits))) <= 30.0 + 1e-3
+
+
+def test_moe_load_balance_aux_positive():
+    from repro.models import moe as moe_mod
+    cfg = reduce_for_smoke(get_config("granite-moe-3b-a800m"))
+    params = moe_mod.init_moe(jax.random.key(0), cfg)
+    from repro.models.params import unzip
+    values, _ = unzip(params)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 16, cfg.d_model)),
+                    jnp.float32)
+    out, aux = moe_mod.moe_apply(values, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux["moe_aux"]) >= 1.0 - 1e-3   # E * sum(me*ce) >= 1
+    assert 0.0 <= float(aux["moe_drop"]) <= 1.0
+
+
+def test_long_context_flags():
+    assert get_config("jamba-v0.1-52b").supports_long_context
+    assert get_config("xlstm-125m").supports_long_context
+    ok, why = get_config("qwen2-7b").supports_shape(SHAPES["long_500k"])
+    assert not ok and "full-attention" in why

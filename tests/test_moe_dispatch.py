@@ -1,0 +1,102 @@
+"""MoE dispatch invariants (hypothesis): capacity, slots, combine weights."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import moe as moe_mod
+from repro.models.params import unzip
+
+
+def make_cfg(num_experts, top_k, capacity_factor, pad_to=0):
+    cfg = reduce_for_smoke(get_config("granite-moe-3b-a800m"))
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, num_experts=num_experts, top_k=top_k,
+            capacity_factor=capacity_factor, pad_experts_to=pad_to))
+
+
+@given(
+    num_experts=st.sampled_from([4, 6, 8]),
+    top_k=st.integers(1, 3),
+    cf=st.sampled_from([0.5, 1.0, 1.25, 4.0]),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=15, deadline=None)
+def test_dispatch_invariants(num_experts, top_k, cf, seed):
+    cfg = make_cfg(num_experts, top_k, cf)
+    m = cfg.moe
+    params = unzip(moe_mod.init_moe(jax.random.key(seed % 100), cfg))[0]
+    rng = np.random.default_rng(seed)
+    B, S = 2, 32
+    x = jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)), jnp.float32)
+    out, aux = moe_mod._moe_apply_dense(params, x, cfg)
+    # INVARIANT 1: finite output, same shape
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+    # INVARIANT 2: drop fraction in [0, 1]; zero when capacity is ample
+    drop = float(aux["moe_drop"])
+    assert 0.0 <= drop <= 1.0
+    if cf >= 4.0:
+        assert drop == 0.0
+    # INVARIANT 3: aux (Switch LB loss) >= ~1 (lower bound at uniformity)
+    assert float(aux["moe_aux"]) >= 1.0 - 1e-2
+
+
+def test_capacity_drops_scale_output_down():
+    """With capacity ~0, (almost) every token is dropped -> near-zero out."""
+    cfg = make_cfg(8, 2, 0.01)
+    params = unzip(moe_mod.init_moe(jax.random.key(0), cfg))[0]
+    x = jnp.ones((2, 64, cfg.d_model), jnp.float32)
+    out, aux = moe_mod._moe_apply_dense(params, x, cfg)
+    assert float(aux["moe_drop"]) > 0.8
+    full_cfg = make_cfg(8, 2, 8.0)
+    out_full, _ = moe_mod._moe_apply_dense(params, x, full_cfg)
+    assert float(jnp.mean(jnp.abs(out))) < float(
+        jnp.mean(jnp.abs(out_full)))
+
+
+def test_expert_padding_is_semantics_preserving():
+    """pad_experts_to only changes layout: same outputs as unpadded."""
+    cfg = make_cfg(6, 2, 8.0)
+    cfg_pad = make_cfg(6, 2, 8.0, pad_to=8)
+    params = unzip(moe_mod.init_moe(jax.random.key(1), cfg))[0]
+    # embed the unpadded weights into the padded layout
+    pad_params = unzip(moe_mod.init_moe(jax.random.key(2), cfg_pad))[0]
+
+    def embed(src, dst):
+        if src.shape == dst.shape:
+            return src
+        out = jnp.zeros_like(dst)
+        return out.at[tuple(slice(0, s) for s in src.shape)].set(src)
+
+    pad_params = jax.tree.map(embed, params, pad_params)
+    x = jnp.asarray(np.random.default_rng(3).normal(
+        0, 1, (2, 16, cfg.d_model)), jnp.float32)
+    out_a, _ = moe_mod._moe_apply_dense(params, x, cfg)
+    out_b, _ = moe_mod._moe_apply_dense(pad_params, x, cfg_pad)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_grouped_cumsum_equals_flat():
+    """The two-level grouped slot assignment == a flat token-major cumsum."""
+    rng = np.random.default_rng(0)
+    E, TK, G = 8, 256, 16
+    flat_ids = jnp.asarray(rng.integers(0, E, TK, dtype=np.int32))
+    # flat reference
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)
+    flat_pos = jnp.cumsum(onehot, 0) - onehot
+    want = jnp.take_along_axis(flat_pos, flat_ids[:, None], 1)[:, 0]
+    # grouped (mirrors _moe_apply_dense)
+    ids_g = flat_ids.reshape(G, TK // G)
+    oh = jax.nn.one_hot(ids_g, E, dtype=jnp.int32)
+    local = jnp.cumsum(oh, 1) - oh
+    counts = jnp.sum(oh, 1)
+    offs = jnp.cumsum(counts, 0) - counts
+    got_pos = (local + offs[:, None, :]).reshape(TK, E)
+    got = jnp.take_along_axis(got_pos, flat_ids[:, None], 1)[:, 0]
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))

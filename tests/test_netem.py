@@ -1,0 +1,77 @@
+"""Network model: reachability, timing, loss composition, faults."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netem import LinkCfg, Network, one_big_switch
+
+
+def test_transfer_timing():
+    net = Network()
+    net.add_link("a", "b", LinkCfg(lat_ms=10.0, bw_mbps=8.0))  # 1 MB/s
+    delay, lost = net.transfer("a", "b", 1_000_000)
+    assert not lost
+    assert delay == pytest.approx(0.010 + 1.0)
+
+
+def test_bottleneck_bw_and_latency_sum():
+    net = Network()
+    net.add_link("a", "m", LinkCfg(lat_ms=5.0, bw_mbps=100.0))
+    net.add_link("m", "b", LinkCfg(lat_ms=15.0, bw_mbps=10.0))
+    delay, _ = net.transfer("a", "b", 1_250_000)  # 10 Mbps = 1.25 MB/s
+    assert delay == pytest.approx(0.020 + 1.0)
+
+
+def test_partition_and_heal():
+    net = one_big_switch(["h1", "h2", "h3"])
+    assert net.reachable("h1", "h2")
+    net.set_link_up("h1", "s1", False)
+    assert not net.reachable("h1", "h2")
+    assert net.reachable("h2", "h3")
+    net.set_link_up("h1", "s1", True)
+    assert net.reachable("h1", "h2")
+
+
+def test_host_down():
+    net = one_big_switch(["h1", "h2"])
+    net.set_host_up("h1", False)
+    assert not net.reachable("h1", "h2")
+
+
+def test_loss_composition():
+    net = Network()
+    net.add_link("a", "m", LinkCfg(loss_pct=100.0))
+    net.add_link("m", "b", LinkCfg())
+    r = random.Random(0)
+    _, lost = net.transfer("a", "b", 10, r)
+    assert lost
+
+
+def test_same_host_free():
+    net = one_big_switch(["h1"])
+    delay, lost = net.transfer("h1", "h1", 10**9)
+    assert delay == 0.0 and not lost
+
+
+@given(
+    lat=st.floats(0.0, 1e3, allow_nan=False),
+    bw=st.floats(0.1, 1e5),
+    nbytes=st.integers(0, 10**9),
+)
+@settings(max_examples=50, deadline=None)
+def test_transfer_nonnegative_monotone(lat, bw, nbytes):
+    net = Network()
+    net.add_link("a", "b", LinkCfg(lat_ms=lat, bw_mbps=bw))
+    d1, _ = net.transfer("a", "b", nbytes)
+    d2, _ = net.transfer("a", "b", nbytes + 1000)
+    assert d1 is not None and d1 >= 0
+    assert d2 >= d1            # more bytes never arrive earlier
+
+
+@given(st.integers(2, 12))
+@settings(max_examples=10, deadline=None)
+def test_star_all_pairs_reachable(n):
+    hosts = [f"h{i}" for i in range(n)]
+    net = one_big_switch(hosts)
+    assert all(net.reachable(a, b) for a in hosts for b in hosts)

@@ -1,0 +1,126 @@
+"""The paper's Fig. 6 scenario: network partition of a topic leader.
+
+zk mode must lose exactly the co-located producer's messages to the
+partitioned topic (via divergent-log truncation) and nothing else;
+kraft mode must lose (almost) nothing; both must elect a new leader and
+restore the preferred leader after the heal.
+"""
+import pytest
+
+from repro.core import Engine, PipelineSpec
+
+FAULT_AT, FAULT_LEN, HORIZON = 60.0, 60.0, 260.0
+
+
+def partition_spec(mode, sites=6):
+    spec = PipelineSpec(mode=mode)
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, sites + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(h)
+    spec.add_topic("topicA", leader="h1", replication=3)
+    spec.add_topic("topicB", leader="h2", replication=3)
+    for h in hosts:
+        spec.add_producer(h, "SYNTHETIC", topics=["topicA", "topicB"],
+                          rateKbps=30.0, msgSize=512)
+        spec.add_consumer(h, "STANDARD", topics=["topicA", "topicB"],
+                          pollInterval=0.5)
+    spec.add_fault(FAULT_AT, "link_down", "h1", "s1", duration=FAULT_LEN)
+    return spec
+
+
+def run(mode, seed=7):
+    eng = Engine(partition_spec(mode), seed=seed)
+    mon = eng.run(until=HORIZON)
+    return eng, mon
+
+
+def lost(mon, consumers, topic, producer_host=None, t_hi=HORIZON - 40):
+    out = []
+    for m in mon.msgs.values():
+        if m.topic != topic or m.produce_time > t_hi:
+            continue
+        if producer_host and producer_host not in m.producer:
+            continue
+        if len(m.deliveries) < len(consumers):
+            out.append(m)
+    return out
+
+
+@pytest.fixture(scope="module")
+def zk():
+    return run("zk")
+
+
+@pytest.fixture(scope="module")
+def kraft():
+    return run("kraft")
+
+
+def test_zk_loses_only_partitioned_topic_from_colocated(zk):
+    eng, mon = zk
+    consumers = eng.consumers_named()
+    lost_a = lost(mon, consumers, "topicA")
+    lost_b = lost(mon, consumers, "topicB")
+    assert len(lost_a) > 0, "partition must lose topicA messages (Fig 6b)"
+    assert all("@h1" in m.producer for m in lost_a), \
+        "losses must come from the co-located producer"
+    assert all(FAULT_AT <= m.produce_time <= FAULT_AT + FAULT_LEN + 10
+               for m in lost_a), "losses only during the disconnection"
+    assert len(lost_b) <= 1          # topicB is delayed, not lost
+
+
+def test_zk_losses_are_truncations(zk):
+    _, mon = zk
+    truncated = [m for m in mon.msgs.values()
+                 if m.truncated_time is not None]
+    assert truncated and all(m.topic == "topicA" for m in truncated)
+
+
+def test_kraft_no_silent_loss(kraft):
+    eng, mon = kraft
+    consumers = eng.consumers_named()
+    assert sum(1 for m in mon.msgs.values()
+               if m.truncated_time is not None) == 0
+    lost_a = lost(mon, consumers, "topicA")
+    total_a = sum(1 for m in mon.msgs.values() if m.topic == "topicA")
+    assert len(lost_a) <= max(2, total_a // 100)    # ~no loss
+
+
+def test_leader_election_and_preferred_restore(zk):
+    _, mon = zk
+    elections = mon.events_of("leader_elected")
+    assert any(e["topic"] == "topicA" for e in elections)
+    e = next(e for e in elections if e["topic"] == "topicA")
+    assert FAULT_AT < e["t"] < FAULT_AT + 20
+    restores = mon.events_of("preferred_leader_restored")
+    assert any(r["topic"] == "topicA" and r["new"] == "h1"
+               and r["t"] > FAULT_AT + FAULT_LEN for r in restores)
+
+
+def test_latency_spike_on_unpartitioned_topic(zk):
+    """Fig. 6c: topicB messages from h1 are delayed ~partition length."""
+    _, mon = zk
+    lats = [l for _, l in mon.latencies(topic="topicB")]
+    assert max(lats) > FAULT_LEN * 0.5
+    # but the median stays low (only the disconnected producer suffers)
+    lats.sort()
+    assert lats[len(lats) // 2] < 2.0
+
+
+def test_backlog_throughput_spikes(zk):
+    """Fig. 6d: events ②③ (new leader commits + serves the backlog right
+    after election) and the post-heal catch-up copy both spike egress."""
+    _, mon = zk
+    e = next(e for e in mon.events_of("leader_elected")
+             if e["topic"] == "topicA")
+    series = dict(mon.throughput_series(e["new"]))
+    base = max(v for t, v in series.items() if t < FAULT_AT)
+    post_election = [v for t, v in series.items()
+                     if e["t"] <= t < e["t"] + 15]
+    assert post_election and max(post_election) > 2 * base
+    post_heal = [v for t, v in series.items()
+                 if FAULT_AT + FAULT_LEN <= t < FAULT_AT + FAULT_LEN + 30]
+    assert post_heal and max(post_heal) > 3 * base

@@ -1,0 +1,110 @@
+"""Sharding resolver properties (hypothesis): divisibility, collision."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.sharding import resolve_spec
+
+
+class FakeMesh:
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        self.devices = np.zeros(tuple(sizes.values()))
+
+
+RULES = {
+    "embed": ("data",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "batch": ("pod", "data"),
+    "none": (),
+}
+
+
+@given(
+    dim0=st.integers(1, 512),
+    dim1=st.integers(1, 512),
+    data=st.sampled_from([1, 2, 4, 8, 16]),
+    model=st.sampled_from([1, 2, 4, 8, 16]),
+)
+@settings(max_examples=100, deadline=None)
+def test_divisibility_always_respected(dim0, dim1, data, model):
+    mesh = FakeMesh({"data": data, "model": model})
+    spec = resolve_spec(("embed", "ffn"), (dim0, dim1), RULES, mesh)
+    parts = list(spec)
+    sizes = {"data": data, "model": model}
+    for dim, p in zip((dim0, dim1), parts):
+        if p is None:
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        assert dim % math.prod(sizes[a] for a in axes) == 0
+
+
+@given(data=st.sampled_from([2, 4, 8]), model=st.sampled_from([2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_no_axis_used_twice(data, model):
+    mesh = FakeMesh({"data": data, "model": model})
+    rules = {"a": ("model",), "b": ("model",)}
+    spec = resolve_spec(("a", "b"), (model * 4, model * 4), rules, mesh)
+    used = []
+    for p in spec:
+        if p is None:
+            continue
+        used.extend(p if isinstance(p, tuple) else (p,))
+    assert len(used) == len(set(used))
+    assert used == ["model"]          # second dim falls back to replicated
+
+
+def test_batch_multi_axis_prefix():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = resolve_spec(("batch", None), (256, 4096), RULES, mesh)
+    assert spec[0] == ("pod", "data")
+    # batch=8: divisible by pod(2) only
+    spec = resolve_spec(("batch", None), (8, 16), RULES, mesh)
+    assert spec[0] == "pod"
+    # batch=1: replicated
+    spec = resolve_spec(("batch", None), (1, 16), RULES, mesh)
+    assert len(spec) == 0 or spec[0] is None
+
+
+def test_mqa_kv_heads_fall_back():
+    """granite-34b: kv=1 must not shard; qwen2 kv=4 on 16-way: replicate."""
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = {"kv_heads": ("model",)}
+    for kv in (1, 4):
+        spec = resolve_spec((None, None, "kv_heads", None),
+                            (2, 128, kv, 64), rules, mesh)
+        assert all(p is None for p in spec)
+
+
+def test_experts_shard_when_divisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = {"expert": ("model",)}
+    spec = resolve_spec(("expert", None, None), (128, 64, 64), rules, mesh)
+    assert spec[0] == "model"
+    spec = resolve_spec(("expert", None, None), (40, 64, 64), rules, mesh)
+    assert len(spec) == 0 or spec[0] is None   # 40 % 16 != 0 -> replicate
+
+
+def test_param_axes_cover_model_tree():
+    """Every model parameter leaf resolves to a valid spec on the mesh."""
+    import jax
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import Model
+    from repro.distributed.sharding import logical_rules
+
+    cfg = reduce_for_smoke(get_config("jamba-v0.1-52b"))
+    model = Model(cfg)
+    shapes, axes = model.param_shapes()
+    mesh = FakeMesh({"data": 4, "model": 2})
+    rules = logical_rules(cfg, mesh)
+
+    def check(ax, sh):
+        assert len(ax) == len(sh.shape), (ax, sh.shape)
+        resolve_spec(ax, sh.shape, rules, mesh)   # must not raise
+
+    jax.tree.map(check, axes, shapes,
+                 is_leaf=lambda x: isinstance(x, tuple) and all(
+                     a is None or isinstance(a, str) for a in x))
