@@ -19,14 +19,15 @@ DOCS = [
 
 def word_count_spec(*, delays: dict[str, float] | None = None,
                     n_files: int = 30, interval: float = 0.25,
-                    bw: float = 1000.0) -> tuple[PipelineSpec, object]:
+                    bw: float = 1000.0,
+                    delivery: str = "wakeup") -> tuple[PipelineSpec, object]:
     """Fig. 2a pipeline: producer -> broker -> split -> count -> sink.
 
     ``delays`` maps component host (h1..h5) to link latency in ms;
     unspecified links use a very low delay (<10 ms, like the paper).
     """
     delays = delays or {}
-    spec = PipelineSpec()
+    spec = PipelineSpec(delivery=delivery)
     spec.add_switch("s1")
     for h in ["h1", "h2", "h3", "h4", "h5"]:
         spec.add_host(h)

@@ -1,0 +1,137 @@
+"""Engine macro-benchmark: emulation hot-path throughput across PRs.
+
+Runs one 50-node, 10-topic streaming scenario (3 replicated brokers, 10
+synthetic producers, 37 consumers) to a fixed simulated horizon under
+both subscriber delivery modes:
+
+- ``poll``   — the legacy fixed-interval polling loop (the pre-refactor
+  event pattern: every idle consumer burns an event per poll interval),
+- ``wakeup`` — the batched event-driven hot path (idle subscribers cost
+  zero events; the cluster wakes them on high-watermark advances).
+
+Reported per mode: wall seconds, executed engine events, events/sec,
+delivered records, records/sec, and the simulated-seconds-per-wall-second
+rate.  The headline ``speedup`` is wall(poll) / wall(wakeup) for the
+*same* simulated work (both modes deliver every message), which is the
+events/sec improvement of the hot path.
+
+Output contract (consumed by CI and tracked across PRs):
+``BENCH_engine.json`` — see ``benchmarks/run.py`` for the schema.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)               # `python benchmarks/...py` works
+
+from repro.core import Engine, PipelineSpec  # noqa: E402
+from benchmarks.common import emit  # noqa: E402
+
+N_BROKERS = 3
+N_TOPICS = 10
+REPLICATION = 3
+
+
+def build(delivery: str, *, n_hosts: int = 50, horizon: float = 120.0,
+          poll_interval: float = 0.1, rate_kbps: float = 0.5
+          ) -> PipelineSpec:
+    """50 hosts: 3 brokers + 10 producers + 37 consumers on one switch."""
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, n_hosts + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=1000.0)
+    brokers = hosts[:N_BROKERS]
+    for b in brokers:
+        spec.add_broker(b)
+    topics = [f"t{i}" for i in range(N_TOPICS)]
+    for i, t in enumerate(topics):
+        spec.add_topic(t, leader=brokers[i % N_BROKERS],
+                       replication=min(REPLICATION, N_BROKERS))
+    producers = hosts[N_BROKERS:N_BROKERS + N_TOPICS]
+    for i, h in enumerate(producers):
+        spec.add_producer(h, "SYNTHETIC", topics=[topics[i]],
+                          rateKbps=rate_kbps, msgSize=512)
+    consumers = hosts[N_BROKERS + N_TOPICS:]
+    for i, h in enumerate(consumers):
+        # each consumer follows two topics, round-robin
+        subs = [topics[i % N_TOPICS], topics[(i + 1) % N_TOPICS]]
+        spec.add_consumer(h, "STANDARD", topics=subs,
+                          pollInterval=poll_interval)
+    return spec
+
+
+def run_mode(delivery: str, repeats: int = 3, **kw) -> dict:
+    """Run the scenario; keep the best-of-N wall time (events are
+    deterministic across repeats, wall time is not on a loaded host)."""
+    horizon = kw.pop("horizon", 120.0)
+    wall = float("inf")
+    for _ in range(repeats):
+        spec = build(delivery, horizon=horizon, **kw)
+        eng = Engine(spec, seed=0)
+        t0 = time.perf_counter()
+        mon = eng.run(until=horizon)
+        wall = min(wall, time.perf_counter() - t0)
+    delivered = sum(len(m.deliveries) for m in mon.msgs.values())
+    return {
+        "wall_s": wall,
+        "sim_s": horizon,
+        "engine_events": eng.n_events,
+        "events_per_wall_s": eng.n_events / wall,
+        "records_produced": len(mon.msgs),
+        "records_delivered": delivered,
+        "records_per_wall_s": delivered / wall,
+        "sim_s_per_wall_s": horizon / wall,
+    }
+
+
+def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
+    kw = dict(n_hosts=20, horizon=30.0) if smoke else {}
+    results = {
+        "scenario": {
+            "n_hosts": kw.get("n_hosts", 50),
+            "n_topics": N_TOPICS,
+            "n_brokers": N_BROKERS,
+            "replication": REPLICATION,
+            "horizon_sim_s": kw.get("horizon", 120.0),
+            "smoke": smoke,
+        },
+    }
+    for mode in ("poll", "wakeup"):
+        results[mode] = run_mode(mode, **kw)
+        emit(f"engine/{mode}", results[mode]["wall_s"] * 1e6,
+             f"events={results[mode]['engine_events']};"
+             f"rec_per_s={results[mode]['records_per_wall_s']:.0f};"
+             f"sim_rate={results[mode]['sim_s_per_wall_s']:.0f}x")
+    # same simulated work in both modes -> wall ratio == throughput gain
+    results["speedup"] = results["poll"]["wall_s"] / \
+        results["wakeup"]["wall_s"]
+    results["event_reduction"] = results["poll"]["engine_events"] / \
+        max(1, results["wakeup"]["engine_events"])
+    assert results["poll"]["records_delivered"] == \
+        results["wakeup"]["records_delivered"], \
+        "modes must complete identical simulated work"
+    emit("engine/speedup", 0.0,
+         f"wall={results['speedup']:.1f}x;"
+         f"events={results['event_reduction']:.1f}x")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scenario for CI (20 hosts, 30 sim-s)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke, out=args.out)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k in ("speedup", "event_reduction")}, indent=2))

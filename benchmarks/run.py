@@ -1,6 +1,26 @@
 """Benchmark runner: one module per paper table/figure + the roofline.
 
 Output contract: ``name,us_per_call,derived`` CSV lines per benchmark.
+
+``engine_throughput`` additionally writes ``BENCH_engine.json`` (in the
+working directory; override with ``--out`` when run standalone), the
+perf-trajectory record tracked across PRs.  Schema::
+
+    {
+      "scenario":  {n_hosts, n_topics, n_brokers, replication,
+                    horizon_sim_s, smoke},
+      "poll":      {wall_s, sim_s, engine_events, events_per_wall_s,
+                    records_produced, records_delivered,
+                    records_per_wall_s, sim_s_per_wall_s},
+      "wakeup":    {... same keys ...},
+      "speedup":         wall(poll) / wall(wakeup),   # same simulated work
+      "event_reduction": events(poll) / events(wakeup)
+    }
+
+``poll`` is the legacy fixed-interval delivery loop (the pre-refactor
+event pattern), ``wakeup`` the batched event-driven hot path; both modes
+must report identical ``records_delivered`` (asserted), so the wall-time
+ratio is a pure scheduler-throughput measurement.
 """
 from __future__ import annotations
 
@@ -10,10 +30,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig5_link_delay, fig6_partition,
-                            fig7_reproductions, fig8_accuracy,
-                            fig9_resources, roofline_table)
+    from benchmarks import (engine_throughput, fig5_link_delay,
+                            fig6_partition, fig7_reproductions,
+                            fig8_accuracy, fig9_resources, roofline_table)
     mods = [
+        ("engine_throughput", engine_throughput),
         ("fig5_link_delay", fig5_link_delay),
         ("fig6_partition", fig6_partition),
         ("fig7_reproductions", fig7_reproductions),

@@ -10,12 +10,13 @@ from repro.core.spec import (
     PRODUCER, CONSUMER, BROKER, SPE, STORE,
 )
 from repro.core.netem import Network, LinkCfg, one_big_switch, star
-from repro.core.engine import Engine
+from repro.core.engine import Engine, EventHandle
+from repro.core.broker import RecordBatch
 from repro.core.monitor import Monitor
 
 __all__ = [
     "PipelineSpec", "Component", "TopicCfg", "FaultCfg", "HostSpec",
     "from_graphml", "Network", "LinkCfg", "one_big_switch", "star",
-    "Engine", "Monitor",
+    "Engine", "EventHandle", "RecordBatch", "Monitor",
     "PRODUCER", "CONSUMER", "BROKER", "SPE", "STORE",
 ]

@@ -21,13 +21,26 @@ protocol surface over the discrete-event engine:
   "could not observe a similar behavior in Raft-based Kafka").
 
 Brokers are in-memory (the paper's accuracy experiments do not exercise
-disk); logs are per-(broker, topic) lists of ``Record``.
+disk).  Each per-(broker, topic) log is a **columnar** :class:`RecordBatch`
+— numpy columns for ``msg_id`` / ``size`` / ``produce_time`` / ``epoch``
+plus a running prefix sum of sizes, and a plain payload list.  Offsets are
+implicit (offset == row index; logs are always dense leader prefixes), so
+``fetch`` byte-capping is a ``searchsorted`` on the prefix sums, divergence
+truncation is a vectorized ``isin``, and catch-up byte accounting is O(1).
+``Record`` objects are materialized only at the delivery boundary.
+
+Delivery modes: consumers either poll (legacy fixed-interval path) or
+register as **waiters**; the cluster wakes waiters when a topic's high
+watermark advances past their offset (and after elections / leadership
+changes, so a waiter pointed at a deposed leader re-resolves metadata).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Optional
+
+import numpy as np
 
 # Protocol timing defaults (seconds); overridable via brokerCfg.
 DEFAULTS = dict(
@@ -41,6 +54,12 @@ DEFAULTS = dict(
     fetch_bytes=1 << 20,
 )
 
+# fetch() outcomes (used by the wakeup delivery loop to decide re-arming)
+FETCH_DELIVERED = "delivered"            # response drained to the HW
+FETCH_DELIVERED_MORE = "delivered_more"  # byte cap hit; committed rows left
+FETCH_EMPTY = "empty"
+FETCH_BLOCKED = "blocked"       # unreachable / electing / stale metadata
+
 
 @dataclass
 class Record:
@@ -52,6 +71,105 @@ class Record:
     producer: str
     offset: int = -1
     epoch: int = 0
+
+
+class RecordBatch:
+    """Columnar append-only log: numpy columns + payload list.
+
+    Rows are offsets (dense, monotone).  ``cum_size[i]`` holds the total
+    bytes of rows ``0..i`` so byte windows never re-scan records.
+    """
+
+    __slots__ = ("n", "msg_id", "size", "produce_time", "epoch",
+                 "cum_size", "payloads", "producers")
+
+    _MIN_CAP = 64
+
+    def __init__(self) -> None:
+        self.n = 0
+        self.msg_id = np.empty(self._MIN_CAP, np.int64)
+        self.size = np.empty(self._MIN_CAP, np.int64)
+        self.produce_time = np.empty(self._MIN_CAP, np.float64)
+        self.epoch = np.empty(self._MIN_CAP, np.int64)
+        self.cum_size = np.empty(self._MIN_CAP, np.int64)
+        self.payloads: list[Any] = []
+        self.producers: list[str] = []
+
+    # -- growth --------------------------------------------------------
+
+    def _grow(self) -> None:
+        cap = max(self._MIN_CAP, 2 * len(self.msg_id))
+        for name in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
+            col = getattr(self, name)
+            new = np.empty(cap, col.dtype)
+            new[:self.n] = col[:self.n]
+            setattr(self, name, new)
+
+    def append_row(self, msg_id: int, size: int, produce_time: float,
+                   epoch: int, payload: Any, producer: str) -> int:
+        """Append one record; returns its offset."""
+        i = self.n
+        if i >= len(self.msg_id):
+            self._grow()
+        self.msg_id[i] = msg_id
+        self.size[i] = size
+        self.produce_time[i] = produce_time
+        self.epoch[i] = epoch
+        self.cum_size[i] = size + (self.cum_size[i - 1] if i else 0)
+        self.payloads.append(payload)
+        self.producers.append(producer)
+        self.n = i + 1
+        return i
+
+    # -- O(1)/O(slice) accounting --------------------------------------
+
+    def bytes_between(self, lo: int, hi: int) -> int:
+        """Total bytes of rows [lo, hi)."""
+        if hi <= lo:
+            return 0
+        base = int(self.cum_size[lo - 1]) if lo else 0
+        return int(self.cum_size[hi - 1]) - base
+
+    def total_bytes(self) -> int:
+        return int(self.cum_size[self.n - 1]) if self.n else 0
+
+    def take_by_bytes(self, lo: int, hi: int, max_bytes: int
+                      ) -> tuple[int, int]:
+        """Greedy byte-capped prefix of rows [lo, hi).
+
+        Returns ``(n_rows, n_bytes)`` where the first row crossing the
+        cap is still included (Kafka ``fetch.max.bytes`` semantics).
+        """
+        if hi <= lo:
+            return 0, 0
+        base = int(self.cum_size[lo - 1]) if lo else 0
+        k = int(np.searchsorted(self.cum_size[lo:hi], base + max_bytes,
+                                side="left"))
+        n = min(hi - lo, k + 1)
+        return n, int(self.cum_size[lo + n - 1]) - base
+
+    def copy_from(self, other: "RecordBatch") -> None:
+        """Become an exact copy of ``other`` (payload objects shared)."""
+        self.n = other.n
+        for name in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
+            setattr(self, name, getattr(other, name)[:other.n].copy())
+        self.payloads = list(other.payloads)
+        self.producers = list(other.producers)
+
+    def rows_not_in(self, other: "RecordBatch") -> np.ndarray:
+        """Row indices whose msg_id does not appear in ``other``."""
+        mask = ~np.isin(self.msg_id[:self.n], other.msg_id[:other.n])
+        return np.nonzero(mask)[0]
+
+    # -- materialization boundary ---------------------------------------
+
+    def record_at(self, i: int, topic: str) -> Record:
+        return Record(int(self.msg_id[i]), topic, self.payloads[i],
+                      int(self.size[i]), float(self.produce_time[i]),
+                      self.producers[i], offset=i, epoch=int(self.epoch[i]))
+
+    def records_slice(self, topic: str, lo: int, hi: int) -> list[Record]:
+        return [self.record_at(i, topic) for i in range(lo, min(hi, self.n))]
 
 
 @dataclass
@@ -72,29 +190,36 @@ class _PendingProduce:
     producer_host: str
     first_attempt: float
     acked: bool = False
+    retry_handle: Any = None             # cancellable EventHandle
 
 
 class ReplicaLog:
-    """One broker's copy of one topic's log."""
+    """One broker's copy of one topic's log (columnar)."""
 
-    def __init__(self) -> None:
-        self.records: list[Record] = []
+    def __init__(self, topic: str = "") -> None:
+        self.topic = topic
+        self.batch = RecordBatch()
         self.hw: int = 0                 # high watermark (committed offsets)
 
     @property
     def leo(self) -> int:                # log end offset
-        return len(self.records)
+        return self.batch.n
+
+    @property
+    def records(self) -> list[Record]:
+        """Materialized view (tests / debugging; not on the hot path)."""
+        return self.batch.records_slice(self.topic, 0, self.batch.n)
 
     def append(self, rec: Record) -> Record:
-        rec = dataclasses.replace(rec, offset=self.leo)
-        self.records.append(rec)
-        return rec
+        off = self.batch.append_row(rec.msg_id, rec.size, rec.produce_time,
+                                    rec.epoch, rec.payload, rec.producer)
+        return dataclasses.replace(rec, offset=off)
 
     def truncate_to(self, other: "ReplicaLog") -> list[Record]:
         """Make this log a copy of ``other``; return locally-lost records."""
-        other_ids = {r.msg_id for r in other.records}
-        lost = [r for r in self.records if r.msg_id not in other_ids]
-        self.records = list(other.records)
+        lost_rows = self.batch.rows_not_in(other.batch)
+        lost = [self.batch.record_at(int(i), self.topic) for i in lost_rows]
+        self.batch.copy_from(other.batch)
         self.hw = other.hw
         return lost
 
@@ -116,12 +241,23 @@ class Cluster:
         self.topics: dict[str, TopicMeta] = {}
         self.subs: dict[str, list] = {}          # topic -> consumer comps
         self._consumer_offsets: dict[tuple[str, str], int] = {}
+        # fetch responses ride one ordered connection per subscription:
+        # (topic, consumer) -> sim time the last in-flight response lands
+        self._inflight_until: dict[tuple[str, str], float] = {}
         self._pending: dict[int, _PendingProduce] = {}
         self._msg_seq = 0
         # client metadata cache: (client_name, topic) -> believed leader
         self._client_meta: dict[tuple[str, str], str] = {}
         # broker leadership belief: (broker, topic) -> (is_leader, epoch)
         self._belief: dict[tuple[str, str], tuple[bool, int]] = {}
+        # wakeup delivery: topic -> {consumer_name: consumer runtime}
+        self._waiters: dict[str, dict[str, Any]] = {}
+
+    def _log(self, broker: str, topic: str) -> ReplicaLog:
+        rl = self.logs[broker].get(topic)
+        if rl is None:
+            rl = self.logs[broker][topic] = ReplicaLog(topic)
+        return rl
 
     # ------------------------------------------------------------------
     # Setup
@@ -139,7 +275,7 @@ class Cluster:
         for b in self.broker_hosts:
             self._belief[(b, name)] = (b == leader, 0)
         for b in replicas:
-            self.logs[b][name] = ReplicaLog()
+            self.logs[b][name] = ReplicaLog(name)
 
     def subscribe(self, consumer, topic: str) -> None:
         self.subs.setdefault(topic, []).append(consumer)
@@ -148,6 +284,25 @@ class Cluster:
     def start(self) -> None:
         self.engine.schedule(self.cfg["controller_tick"],
                              self._controller_tick)
+
+    # ------------------------------------------------------------------
+    # Wakeup delivery (event-driven subscribers)
+    # ------------------------------------------------------------------
+
+    def wait_for_data(self, consumer, topic: str) -> None:
+        """Park a subscriber until the topic's high watermark advances."""
+        self._waiters.setdefault(topic, {})[consumer.name] = consumer
+
+    def _notify(self, topic: str) -> None:
+        """Wake every parked subscriber of ``topic`` (zero-delay events)."""
+        waiting = self._waiters.get(topic)
+        if not waiting:
+            return
+        eng = self.engine
+        consumers = list(waiting.values())
+        waiting.clear()
+        for c in consumers:
+            eng.schedule(0.0, lambda c=c: c.on_wakeup(eng, topic))
 
     # ------------------------------------------------------------------
     # Client metadata (stale caches refreshed via reachable brokers)
@@ -190,9 +345,12 @@ class Cluster:
         return rec.msg_id
 
     def _retry_later(self, msg_id: int) -> None:
-        self.engine.schedule(
+        h = self.engine.schedule(
             self.cfg["retry_backoff"] + self.cfg["request_timeout"],
             lambda: self._attempt_produce(msg_id))
+        pend = self._pending.get(msg_id)
+        if pend is not None:
+            pend.retry_handle = h
 
     def _attempt_produce(self, msg_id: int) -> None:
         eng = self.engine
@@ -200,6 +358,7 @@ class Cluster:
         pend = self._pending.get(msg_id)
         if pend is None or pend.acked:
             return
+        pend.retry_handle = None
         rec = pend.record
         if now - pend.first_attempt > self.cfg["delivery_timeout"]:
             eng.monitor.expired(rec, now)       # producer gives up
@@ -215,7 +374,7 @@ class Cluster:
             self._retry_later(msg_id)
             return
         delay, lost = eng.net.transfer(pend.producer_host, leader, rec.size,
-                                       eng.rng)
+                                       eng.client_rng(rec.producer))
         if delay is None or lost:
             # cached leader unreachable: drop the cache so the next attempt
             # refreshes metadata through any reachable broker.
@@ -235,14 +394,15 @@ class Cluster:
         if not believes:
             # NOT_LEADER response: refresh metadata and retry
             self._invalidate_client(rec.producer, rec.topic)
-            eng.schedule(self.cfg["retry_backoff"],
-                         lambda: self._attempt_produce(msg_id))
+            pend.retry_handle = eng.schedule(
+                self.cfg["retry_backoff"],
+                lambda: self._attempt_produce(msg_id))
             return
         if self.mode == "kraft" and not self._quorum_reachable(broker, meta):
             # Raft: a leader that cannot reach a quorum refuses the write.
             self._retry_later(msg_id)
             return
-        log = self.logs[broker].setdefault(rec.topic, ReplicaLog())
+        log = self._log(broker, rec.topic)
         rec = log.append(dataclasses.replace(rec, epoch=bepoch))
         eng.monitor.broker_rx(broker, rec.size)
         # Kafka default acks=1: ack once the (believed) leader has the
@@ -256,14 +416,15 @@ class Cluster:
     def _replicate(self, broker: str, rec: Record) -> None:
         eng = self.engine
         meta = self.topics[rec.topic]
+        rep_rng = eng.client_rng("cluster:replication")
         for b in [x for x in meta.isr if x != broker]:
-            delay, lost = eng.net.transfer(broker, b, rec.size, eng.rng)
+            delay, lost = eng.net.transfer(broker, b, rec.size, rep_rng)
             if delay is None or lost:
                 continue   # follower unreachable; controller manages ISR
             eng.monitor.broker_tx(broker, rec.size)
 
             def _deliver(b=b, rec=rec):
-                rl = self.logs[b].setdefault(rec.topic, ReplicaLog())
+                rl = self._log(b, rec.topic)
                 if rl.leo == rec.offset:       # in-order replication only
                     rl.append(rec)
                     eng.monitor.broker_rx(b, rec.size)
@@ -272,20 +433,28 @@ class Cluster:
             eng.schedule(delay, _deliver)
 
     def _maybe_commit(self, topic: str) -> None:
-        """Advance HW to min(LEO) over the current ISR."""
+        """Advance HW to min(LEO) over the current ISR; wake waiters."""
         meta = self.topics[topic]
         logs = [self.logs[b].get(topic) for b in meta.isr]
         if any(l is None for l in logs):
             return
         hw = min(l.leo for l in logs)
-        for b in meta.isr:
-            rl = self.logs[b][topic]
-            rl.hw = max(rl.hw, min(hw, rl.leo))
+        advanced = False
+        for l in logs:
+            new_hw = max(l.hw, min(hw, l.leo))
+            if new_hw != l.hw:
+                l.hw = new_hw
+                advanced = True
+        if advanced:
+            self._notify(topic)
 
     def _ack(self, rec: Record) -> None:
         pend = self._pending.pop(rec.msg_id, None)
         if pend is not None:
             pend.acked = True
+            if pend.retry_handle is not None:
+                pend.retry_handle.cancel()      # lazy heap deletion
+                pend.retry_handle = None
         self.engine.monitor.committed(rec, self.engine.now)
 
     def _quorum_reachable(self, broker: str, meta: TopicMeta) -> bool:
@@ -294,56 +463,61 @@ class Cluster:
         return live > len(meta.replicas) // 2
 
     # ------------------------------------------------------------------
-    # Fetch path (consumers poll)
+    # Fetch path (consumers poll, or are woken by _notify)
     # ------------------------------------------------------------------
 
-    def fetch(self, consumer, topic: str) -> None:
-        """Poll: asynchronously deliver committed records past the offset."""
+    def fetch(self, consumer, topic: str) -> str:
+        """Deliver committed records past the consumer's offset.
+
+        Returns a FETCH_* status so the wakeup delivery loop can decide
+        whether to re-fetch, park as a waiter, or back off and retry.
+        """
         eng = self.engine
         meta = self.topics[topic]
         chost = consumer.host
+        rng = eng.client_rng(consumer.name)
         leader = self._client_leader(chost, consumer.name, topic)
         if leader is None:
-            return
+            return FETCH_BLOCKED
         if eng.now < meta.electing_until and leader == meta.leader:
-            return
-        rtt, lost = eng.net.transfer(chost, leader, 64, eng.rng)
+            return FETCH_BLOCKED
+        rtt, lost = eng.net.transfer(chost, leader, 64, rng)
         if rtt is None or lost:
             self._invalidate_client(consumer.name, topic)
-            return
+            return FETCH_BLOCKED
         if not self._belief[(leader, topic)][0]:
             self._invalidate_client(consumer.name, topic)   # NOT_LEADER
-            return
+            return FETCH_BLOCKED
         key = (topic, consumer.name)
         log = self.logs[leader].get(topic)
         if log is None:
-            return
+            return FETCH_EMPTY
         off = self._consumer_offsets[key]
-        batch = log.records[off:log.hw]         # index == offset per log
-        if not batch:
-            return
-        # fetch.max.bytes: cap one response (remainder on the next poll)
-        limit = self.cfg["fetch_bytes"]
-        total, n = 0, 0
-        for r in batch:
-            total += r.size
-            n += 1
-            if total >= limit:
-                break
-        batch = batch[:n]
-        nbytes = sum(r.size for r in batch)
-        delay, lost = eng.net.transfer(leader, chost, nbytes, eng.rng)
+        if off >= log.hw:
+            return FETCH_EMPTY
+        # fetch.max.bytes: cap one response (remainder on the next fetch)
+        n, nbytes = log.batch.take_by_bytes(off, log.hw,
+                                            self.cfg["fetch_bytes"])
+        delay, lost = eng.net.transfer(leader, chost, nbytes, rng)
         if delay is None or lost:
-            return
-        self._consumer_offsets[key] = batch[-1].offset + 1
+            return FETCH_BLOCKED
+        self._consumer_offsets[key] = off + n
         eng.monitor.broker_tx(leader, nbytes)
+        batch = log.batch.records_slice(topic, off, off + n)
 
-        def _deliver(batch=tuple(batch)):
+        def _deliver():
             for r in batch:
                 eng.monitor.delivered(r, consumer.name, eng.now)
-            consumer.on_records(eng, list(batch))
+            consumer.on_records(eng, batch)
 
-        eng.schedule(rtt + delay, _deliver)
+        # TCP-ordered responses: a small later response must not overtake
+        # a big in-flight one, or the consumer would see offsets out of
+        # order (ties keep FIFO order via the heap sequence number).
+        t_land = max(eng.now + rtt + delay,
+                     self._inflight_until.get(key, 0.0))
+        self._inflight_until[key] = t_land
+        eng.schedule(t_land - eng.now, _deliver)
+        return FETCH_DELIVERED_MORE if off + n < log.hw else FETCH_DELIVERED
 
     # ------------------------------------------------------------------
     # Controller: failure detection, election, ISR, preferred rebalance
@@ -422,8 +596,15 @@ class Cluster:
         self._belief[(new_leader, meta.name)] = (True, meta.epoch)
         self.engine.monitor.event(now, "leader_elected", topic=meta.name,
                                   old=old, new=new_leader, epoch=meta.epoch)
+        # Waiters parked on the deposed leader must re-resolve metadata;
+        # commit (and re-notify) once the election window closes.
+        self._notify(meta.name)
         self.engine.schedule(self.cfg["election_time"],
-                             lambda: self._maybe_commit(meta.name))
+                             lambda: self._post_election(meta.name))
+
+    def _post_election(self, topic: str) -> None:
+        self._maybe_commit(topic)
+        self._notify(topic)
 
     def _manage_isr(self, meta: TopicMeta, ctrl: Optional[str],
                     now: float) -> None:
@@ -453,13 +634,12 @@ class Cluster:
         Fig. 6b): records that exist only in the rejoining replica are
         dropped.
         """
-        leader_log = self.logs[meta.leader].setdefault(
-            meta.name, ReplicaLog())
-        rl = self.logs[b].setdefault(meta.name, ReplicaLog())
+        leader_log = self._log(meta.leader, meta.name)
+        rl = self._log(b, meta.name)
         if rl is leader_log:
             return
         lost = rl.truncate_to(leader_log)
-        nbytes = sum(r.size for r in leader_log.records)
+        nbytes = leader_log.batch.total_bytes()
         if nbytes:
             self.engine.monitor.broker_tx(meta.leader, nbytes)
             self.engine.monitor.broker_rx(b, nbytes)
@@ -487,3 +667,4 @@ class Cluster:
                                       topic=meta.name, old=old,
                                       new=preferred, epoch=meta.epoch)
             self._maybe_commit(meta.name)
+            self._notify(meta.name)

@@ -13,11 +13,27 @@ hosts have ``n_cores`` and a ``cpuPercentage`` cap (Table I), and service
 times queue on per-core availability.  This keeps runs reproducible on a
 1-core container while preserving the paper's "same code as production"
 property for outputs.
+
+Hot-path design (large sweeps, 100+ emulated nodes):
+
+- :meth:`Engine.schedule` returns a cancellable :class:`EventHandle`;
+  cancellation is *lazy* (the heap entry is skipped at pop time), so
+  cancel is O(1) and the heap never needs re-sifting.
+- Deterministic per-client RNG streams (:meth:`Engine.client_rng`)
+  decouple independent components: a consumer drawing loss samples on its
+  fetch path cannot perturb a producer's schedule.  This is what makes
+  the polling and wakeup delivery modes bit-comparable on the
+  produce/protocol side for a fixed seed.
+- ``spec.delivery`` selects the subscriber delivery mode: ``"wakeup"``
+  (default — the cluster notifies subscribers when the high watermark
+  passes their offset; idle subscribers cost zero events) or ``"poll"``
+  (the legacy fixed-interval path, kept for parity checks).
 """
 from __future__ import annotations
 
 import heapq
 import random
+import zlib
 from typing import Callable, Optional
 
 from repro.core.broker import Cluster
@@ -26,6 +42,21 @@ from repro.core.spec import (
     BROKER, CONSUMER, PRODUCER, SPE, STORE, PipelineSpec,
 )
 from repro.core import faults as faults_mod
+
+
+class EventHandle:
+    """A scheduled event; ``cancel()`` is O(1) (lazy heap deletion)."""
+
+    __slots__ = ("t", "fn", "cancelled")
+
+    def __init__(self, t: float, fn: Callable[[], None]):
+        self.t = t
+        self.fn = fn
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+        self.fn = None          # drop closure references early
 
 
 class HostRuntime:
@@ -57,12 +88,21 @@ class Engine:
                              "\n  ".join(problems))
         self.spec = spec
         self.net = spec.network
-        self.rng = random.Random(seed)
+        self.seed = seed
+        # NOTE: no shared engine-wide RNG on purpose — every component
+        # draws from its own client_rng stream so that delivery-mode and
+        # component changes cannot perturb each other's randomness.
+        self._client_rngs: dict[str, random.Random] = {}
+        self.delivery_mode = getattr(spec, "delivery", "wakeup")
         self.monitor = monitor or Monitor()
         self.now = 0.0
         self._q: list = []
         self._seq = 0
         self._stopped = False
+        # event-loop statistics (benchmarks / regression tracking)
+        self.n_events = 0               # events actually executed
+        self.n_scheduled = 0            # events pushed onto the heap
+        self.n_cancelled = 0            # events skipped via lazy deletion
 
         self.hosts = {
             h.name: HostRuntime(h.name, h.n_cores, h.cpu_percentage)
@@ -97,15 +137,37 @@ class Engine:
                 self.runtimes.append(rt)
 
     # ------------------------------------------------------------------
+    # Deterministic per-client randomness
+    # ------------------------------------------------------------------
+
+    def client_rng(self, name: str) -> random.Random:
+        """A stable RNG stream for one component (or protocol role).
+
+        Streams are independent: how often one component draws cannot
+        shift another component's sequence.  Derived from the engine seed
+        and the client name, so runs are reproducible and the polling /
+        wakeup delivery modes see identical produce-side randomness.
+        """
+        rng = self._client_rngs.get(name)
+        if rng is None:
+            rng = random.Random(
+                (self.seed << 32) ^ zlib.crc32(name.encode()))
+            self._client_rngs[name] = rng
+        return rng
+
+    # ------------------------------------------------------------------
     # Event loop
     # ------------------------------------------------------------------
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+    def schedule(self, delay: float, fn: Callable[[], None]) -> EventHandle:
+        h = EventHandle(self.now + max(0.0, delay), fn)
         self._seq += 1
-        heapq.heappush(self._q, (self.now + max(0.0, delay), self._seq, fn))
+        self.n_scheduled += 1
+        heapq.heappush(self._q, (h.t, self._seq, h))
+        return h
 
-    def schedule_at(self, t: float, fn: Callable[[], None]) -> None:
-        self.schedule(t - self.now, fn)
+    def schedule_at(self, t: float, fn: Callable[[], None]) -> EventHandle:
+        return self.schedule(t - self.now, fn)
 
     def stop(self) -> None:
         self._stopped = True
@@ -116,12 +178,17 @@ class Engine:
         self.cluster.start()
         for rt in self.runtimes:
             rt.start(self)
-        while self._q and not self._stopped:
-            t, _, fn = heapq.heappop(self._q)
+        q = self._q
+        while q and not self._stopped:
+            t, _, h = heapq.heappop(q)
+            if h.cancelled:
+                self.n_cancelled += 1
+                continue
             if t > until:
                 break
             self.now = t
-            fn()
+            self.n_events += 1
+            h.fn()
         self.now = until
         return self.monitor
 

@@ -28,8 +28,21 @@ import numpy as np
 
 from repro.core.spec import Component
 from repro.core.stubs import PER_BYTE_S, PER_RECORD_S
+from repro.core.subscription import DeliveryLoop
 
 WINDOW_BASE_S = 200e-6
+
+
+def jit_bucket(n: int, min_bucket: int = 16) -> int:
+    """Pad a batch length to its power-of-two bucket.
+
+    Jitted window computations see only bucket sizes, so the number of
+    XLA compilations is O(log max_window) instead of one per distinct
+    window length (which recompiled nearly every window in long runs).
+    """
+    if n <= min_bucket:
+        return min_bucket
+    return 1 << (n - 1).bit_length()
 
 
 # ---------------------------------------------------------------------------
@@ -37,7 +50,7 @@ WINDOW_BASE_S = 200e-6
 # ---------------------------------------------------------------------------
 
 
-class SPERuntime:
+class SPERuntime(DeliveryLoop):
     def __init__(self, comp: Component, host: str):
         self.comp = comp
         self.host = host
@@ -55,15 +68,9 @@ class SPERuntime:
     # consumer-side ---------------------------------------------------------
 
     def start(self, eng) -> None:
-        eng.cluster.subscribe(self, self.in_topic)
-        eng.schedule(eng.rng.uniform(0, self.poll_interval),
-                     lambda: self.poll(eng))
+        self.start_delivery(eng, [self.in_topic])
         if self.window_s > 0:
             eng.schedule(self.window_s, lambda: self.flush(eng))
-
-    def poll(self, eng) -> None:
-        eng.cluster.fetch(self, self.in_topic)
-        eng.schedule(self.poll_interval, lambda: self.poll(eng))
 
     def on_records(self, eng, records) -> None:
         if self.window_s > 0:
@@ -336,12 +343,16 @@ class FraudSVMQuery(Query):
                 feats.append(np.asarray(d["x"], np.float32))
         if not feats:
             return []
-        xs = jnp.asarray(np.stack(feats))
-        scores = np.asarray(self._score(xs))
-        payload = {"n": len(feats),
+        # bucket-pad rows so the jitted score sees power-of-two shapes
+        # (scores are per-row, so padding rows cannot perturb real rows)
+        n = len(feats)
+        xs = np.zeros((jit_bucket(n), self.dim), np.float32)
+        xs[:n] = np.stack(feats)
+        scores = np.asarray(self._score(jnp.asarray(xs)))[:n]
+        payload = {"n": n,
                    "anomalies": int((scores > 0).sum()),
                    "scores": scores.tolist()}
-        return [self._wrap(payload, 4 * len(feats), self._unit(records))]
+        return [self._wrap(payload, 4 * n, self._unit(records))]
 
 
 # ---------------------------------------------------------------------------
@@ -384,7 +395,7 @@ class TrafficMetricsQuery(Query):
         pkts = [p for p in pkts if isinstance(p, dict) and "service" in p]
         if not pkts:
             return []
-        n = 1 << max(4, (len(pkts) - 1).bit_length())    # pad: stable shapes
+        n = jit_bucket(len(pkts))                        # pad: stable shapes
         sids = np.zeros((n,), np.int32)
         sizes = np.zeros((n,), np.float32)
         valid = np.zeros((n,), bool)
@@ -464,7 +475,15 @@ class LMGenerateQuery(Query):
             if not (isinstance(d, dict) and "tokens" in d):
                 continue
             toks = jnp.asarray(d["tokens"]) % self.cfg.vocab_size
-            gen = np.asarray(self._serve(self.params, toks))
+            # bucket-pad the batch axis: rows decode independently, so
+            # padded requests change neither outputs nor compile counts
+            B = toks.shape[0]
+            Bp = jit_bucket(B, min_bucket=1)
+            if Bp != B:
+                toks = jnp.concatenate(
+                    [toks, jnp.zeros((Bp - B, toks.shape[1]),
+                                     toks.dtype)], 0)
+            gen = np.asarray(self._serve(self.params, toks))[:B]
             unit = (r.payload.get("unit")
                     if isinstance(r.payload, dict) else None)
             out.append(self._wrap({"generated": gen.tolist()},

@@ -77,13 +77,18 @@ class HostSpec:
 class PipelineSpec:
     """The full emulation task description."""
 
-    def __init__(self, *, mode: str = "zk") -> None:
+    def __init__(self, *, mode: str = "zk",
+                 delivery: str = "wakeup") -> None:
         assert mode in ("zk", "kraft"), mode
+        assert delivery in ("wakeup", "poll"), delivery
         self.hosts: dict[str, HostSpec] = {}
         self.topics: dict[str, TopicCfg] = {}
         self.faults: list[FaultCfg] = []
         self.network = Network()
         self.mode = mode            # broker coordination: ZooKeeper vs KRaft
+        # subscriber delivery: "wakeup" (event-driven, the fast hot path)
+        # or "poll" (legacy fixed-interval loop, kept for parity checks)
+        self.delivery = delivery
         self._comp_seq = 0
 
     # ------------------------------------------------------------------
@@ -210,11 +215,12 @@ def _load_cfg(value: str, base_dir: str) -> dict:
     return parsed if isinstance(parsed, dict) else {"value": parsed}
 
 
-def from_graphml(path: str, *, mode: str = "zk") -> PipelineSpec:
+def from_graphml(path: str, *, mode: str = "zk",
+                 delivery: str = "wakeup") -> PipelineSpec:
     """Parse a paper-style GraphML description (plus side YAML files)."""
     g = nx.read_graphml(path)
     base = os.path.dirname(os.path.abspath(path))
-    spec = PipelineSpec(mode=mode)
+    spec = PipelineSpec(mode=mode, delivery=delivery)
 
     # graph-level attributes
     if "topicCfg" in g.graph:

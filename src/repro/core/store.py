@@ -35,7 +35,8 @@ class StoreRuntime:
 
     def remote_put(self, eng, src_host: str, key: Any, value: Any,
                    size: int = 64) -> None:
-        delay, lost = eng.net.transfer(src_host, self.host, size, eng.rng)
+        delay, lost = eng.net.transfer(src_host, self.host, size,
+                                       eng.client_rng("store:" + self.name))
         if delay is None or lost:
             return
 

@@ -21,6 +21,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.spec import Component
+from repro.core.subscription import DeliveryLoop
 
 # Host-compute cost model (seconds); deliberately simple + documented.
 PER_RECORD_S = 50e-6
@@ -41,6 +42,9 @@ class ProducerBase:
         self.sent = 0
 
     def start(self, eng) -> None:
+        # own deterministic stream: producer schedules are independent of
+        # consumer-side draws (poll/wakeup parity, see engine.client_rng)
+        self.rng = eng.client_rng(self.name)
         eng.schedule(float(self.comp.get("startDelay", 0.0)),
                      lambda: self.tick(eng))
 
@@ -121,7 +125,7 @@ class SyntheticProducer(ProducerBase):
     def tick(self, eng) -> None:
         if self.sent >= self.total:
             return
-        topic = self.topics[eng.rng.randrange(len(self.topics))]
+        topic = self.topics[self.rng.randrange(len(self.topics))]
         payload = {"seq": self.sent, "src": self.name}
         self.produce(eng, payload, self.msg_size, topic=topic)
         eng.schedule(self.interval, lambda: self.tick(eng))
@@ -158,10 +162,10 @@ class PacketProducer(ProducerBase):
     def tick(self, eng) -> None:
         if self.sent >= self.total:
             return
-        svc = self.services[eng.rng.randrange(len(self.services))]
+        svc = self.services[self.rng.randrange(len(self.services))]
         self.produce(eng, {"user": self.name, "service": svc,
                            "bytes": self.pkt_bytes}, self.pkt_bytes)
-        eng.schedule(eng.rng.expovariate(self.rate_pps),
+        eng.schedule(self.rng.expovariate(self.rate_pps),
                      lambda: self.tick(eng))
 
 
@@ -192,7 +196,7 @@ class TokensProducer(ProducerBase):
 # ---------------------------------------------------------------------------
 
 
-class ConsumerBase:
+class ConsumerBase(DeliveryLoop):
     def __init__(self, comp: Component, host: str):
         self.comp = comp
         self.host = host
@@ -206,20 +210,11 @@ class ConsumerBase:
         self.busy_until = 0.0      # Kafka poll loop: fetch after processing
 
     def start(self, eng) -> None:
-        for t in self.topics:
-            eng.cluster.subscribe(self, t)
-        # random initial poll phase (real consumers are not synchronized)
-        eng.schedule(eng.rng.uniform(0, self.poll_interval),
-                     lambda: self.poll(eng))
+        self.start_delivery(eng, self.topics)
 
-    def poll(self, eng) -> None:
+    def _busy_horizon(self, eng) -> float:
         # synchronous poll loop: don't fetch while processing is backlogged
-        if self.busy_until > eng.now:
-            eng.schedule(self.busy_until - eng.now, lambda: self.poll(eng))
-            return
-        for t in self.topics:
-            eng.cluster.fetch(self, t)
-        eng.schedule(self.poll_interval, lambda: self.poll(eng))
+        return self.busy_until
 
     def on_records(self, eng, records) -> None:
         nbytes = sum(r.size for r in records)

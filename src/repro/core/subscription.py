@@ -1,0 +1,97 @@
+"""Subscriber delivery loops: event-driven wakeups or legacy polling.
+
+Both consumer stubs and SPE runtimes subscribe to topics and pull records
+through ``Cluster.fetch``.  This mixin owns the *scheduling* of those
+fetches in the two delivery modes (``spec.delivery``):
+
+``wakeup`` (default)
+    After an empty fetch the subscriber parks as a cluster *waiter*; the
+    cluster wakes it when the topic's high watermark advances past its
+    offset (or leadership changes).  An idle subscriber costs **zero**
+    events — the old ``poll_interval=0.1`` path generated millions of
+    no-op events over long sweeps.  When a fetch is *blocked* (leader
+    unreachable, election in progress, stale metadata, lost response)
+    the loop degrades to interval retries, so fault scenarios behave
+    like polling until the cluster is healthy again.
+
+``poll``
+    The legacy fixed-interval loop, kept behind the spec flag for parity
+    checks (see ``tests/test_wakeup_parity.py``).
+
+The busy gate mirrors Kafka's synchronous poll loop: a subscriber whose
+host is still processing the previous batch defers its next fetch until
+the processing completes (``_busy_horizon``).
+"""
+from __future__ import annotations
+
+from repro.core.broker import (
+    FETCH_DELIVERED, FETCH_DELIVERED_MORE, FETCH_EMPTY,
+)
+
+
+class DeliveryLoop:
+    """Mixin driving Cluster.fetch for a subscriber runtime.
+
+    Requires from the host class: ``name``, ``host``, ``poll_interval``,
+    and ``on_records(eng, records)``.
+    """
+
+    def start_delivery(self, eng, topics) -> None:
+        topics = list(topics)
+        for t in topics:
+            eng.cluster.subscribe(self, t)
+        # random initial phase (real subscribers are not synchronized)
+        rng = eng.client_rng(self.name)
+        if eng.delivery_mode == "wakeup":
+            for t in topics:
+                eng.schedule(rng.uniform(0, self.poll_interval),
+                             lambda t=t: self._fetch_once(eng, t))
+        else:
+            eng.schedule(rng.uniform(0, self.poll_interval),
+                         lambda: self._poll(eng, topics))
+
+    def _busy_horizon(self, eng) -> float:
+        """Time until which fetches must be deferred (0 = never busy)."""
+        return 0.0
+
+    # -- legacy polling -------------------------------------------------
+
+    def _poll(self, eng, topics) -> None:
+        busy = self._busy_horizon(eng)
+        if busy > eng.now:
+            eng.schedule(busy - eng.now, lambda: self._poll(eng, topics))
+            return
+        for t in topics:
+            eng.cluster.fetch(self, t)
+        eng.schedule(self.poll_interval, lambda: self._poll(eng, topics))
+
+    # -- event-driven wakeups ------------------------------------------
+    #
+    # Invariant: per (subscriber, topic) exactly one of {scheduled fetch
+    # event, cluster waiter registration} is outstanding, so fetches are
+    # never duplicated and never dropped.
+
+    def _fetch_once(self, eng, topic) -> None:
+        busy = self._busy_horizon(eng)
+        if busy > eng.now:
+            eng.schedule(busy - eng.now,
+                         lambda: self._fetch_once(eng, topic))
+            return
+        status = eng.cluster.fetch(self, topic)
+        if status == FETCH_EMPTY or status == FETCH_DELIVERED:
+            # drained to the high watermark: park until it advances
+            eng.cluster.wait_for_data(self, topic)
+        elif status == FETCH_DELIVERED_MORE:
+            # byte-capped response: drain the remainder at the polling
+            # cadence, exactly like the legacy loop — the in-flight batch
+            # must land (and set the busy horizon) before the next fetch,
+            # otherwise a big backlog is pulled in one sim instant
+            eng.schedule(self.poll_interval,
+                         lambda: self._fetch_once(eng, topic))
+        else:   # blocked: fall back to interval retries under faults
+            eng.schedule(self.poll_interval,
+                         lambda: self._fetch_once(eng, topic))
+
+    def on_wakeup(self, eng, topic) -> None:
+        """Cluster callback: the topic may have data past our offset."""
+        self._fetch_once(eng, topic)

@@ -1,0 +1,59 @@
+"""Hypothesis compatibility shim for the tier-1 suite.
+
+Property-based tests use real hypothesis when it is installed (the
+optional ``[dev]`` extra).  When it is missing, this module provides a
+minimal stand-in that runs each ``@given`` test on a small, fixed-seed
+pseudo-random sample — the suite stays runnable everywhere without the
+dependency, at reduced (but deterministic) coverage.
+
+Only the strategy surface the tests actually use is emulated:
+``integers``, ``floats``, ``sampled_from``.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random as _random
+
+    _FALLBACK_EXAMPLES = 5      # per test, when hypothesis is absent
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(lambda r: xs[r.randrange(len(xs))])
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not see fn's parameters as
+            # fixtures (real hypothesis does the same signature erasure)
+            def wrapper():
+                rng = _random.Random(0x57E4)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = [s.draw(rng) for s in arg_strats]
+                    kdrawn = {k: s.draw(rng)
+                              for k, s in kw_strats.items()}
+                    fn(*drawn, **kdrawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,6 +1,9 @@
 """Broker protocol invariants: offsets, HW, replication, delivery."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# real hypothesis when installed, deterministic fixed-seed sampler when
+# not — the tier-1 suite must run everywhere (see tests/_hyp.py)
+from _hyp import given, settings, strategies as st
 
 from repro.core import Engine, PipelineSpec
 

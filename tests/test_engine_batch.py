@@ -1,0 +1,164 @@
+"""Unit tests for the batched hot path: RecordBatch columnar log,
+cancellable engine events, per-client RNG streams, jit buckets."""
+import numpy as np
+import pytest
+
+from repro.core import Engine, PipelineSpec, RecordBatch
+from repro.core.broker import Record, ReplicaLog
+from repro.core.spe import FraudSVMQuery, jit_bucket
+from repro.core.spec import Component
+
+
+# ---------------------------------------------------------------------------
+# RecordBatch
+# ---------------------------------------------------------------------------
+
+
+def fill(batch, sizes, id0=1):
+    for i, s in enumerate(sizes):
+        batch.append_row(id0 + i, s, 0.1 * i, 0, {"seq": i}, f"p{i % 3}")
+
+
+def test_append_and_materialize():
+    b = RecordBatch()
+    fill(b, [10, 20, 30])
+    assert b.n == 3
+    recs = b.records_slice("t", 0, 3)
+    assert [r.offset for r in recs] == [0, 1, 2]
+    assert [r.msg_id for r in recs] == [1, 2, 3]
+    assert [r.size for r in recs] == [10, 20, 30]
+    assert recs[1].payload == {"seq": 1}
+    assert recs[2].producer == "p2"
+
+
+def test_growth_beyond_min_capacity():
+    b = RecordBatch()
+    n = 5 * RecordBatch._MIN_CAP + 3
+    fill(b, [7] * n)
+    assert b.n == n
+    assert b.total_bytes() == 7 * n
+    assert int(b.msg_id[n - 1]) == n
+
+
+def test_prefix_sum_byte_accounting():
+    b = RecordBatch()
+    sizes = [5, 1, 100, 3, 42]
+    fill(b, sizes)
+    for lo in range(len(sizes) + 1):
+        for hi in range(lo, len(sizes) + 1):
+            assert b.bytes_between(lo, hi) == sum(sizes[lo:hi])
+
+
+def test_take_by_bytes_matches_greedy_loop():
+    rng = np.random.default_rng(0)
+    b = RecordBatch()
+    sizes = rng.integers(1, 1000, 200).tolist()
+    fill(b, sizes)
+    for lo, hi, cap in [(0, 200, 2500), (17, 180, 1), (50, 51, 10**9),
+                        (0, 200, 10**9), (100, 100, 50)]:
+        # reference: the old per-record greedy loop
+        total, n_ref = 0, 0
+        for s in sizes[lo:hi]:
+            total += s
+            n_ref += 1
+            if total >= cap:
+                break
+        n, nbytes = b.take_by_bytes(lo, hi, cap)
+        assert n == n_ref
+        assert nbytes == sum(sizes[lo:lo + n])
+
+
+def test_truncate_to_returns_lost_and_copies():
+    lead = ReplicaLog("t")
+    follow = ReplicaLog("t")
+    for i in range(5):
+        r = Record(i + 1, "t", f"v{i}", 10, 0.0, "p")
+        lead.append(r)
+        follow.append(r)
+    # follower diverges with msg_ids 100..102
+    for i in range(3):
+        follow.append(Record(100 + i, "t", "stale", 10, 1.0, "q"))
+    lead.hw = lead.leo
+    lost = follow.truncate_to(lead)
+    assert sorted(r.msg_id for r in lost) == [100, 101, 102]
+    assert [r.msg_id for r in follow.records] == [1, 2, 3, 4, 5]
+    assert follow.hw == lead.hw
+    assert follow.batch.total_bytes() == lead.batch.total_bytes()
+
+
+# ---------------------------------------------------------------------------
+# Engine: cancellable handles, lazy heap deletion, per-client RNGs
+# ---------------------------------------------------------------------------
+
+
+def tiny_spec():
+    spec = PipelineSpec()
+    spec.add_host("a")
+    return spec
+
+
+def test_event_handle_cancel_is_lazy():
+    eng = Engine(tiny_spec())
+    fired = []
+    h1 = eng.schedule(1.0, lambda: fired.append("a"))
+    h2 = eng.schedule(2.0, lambda: fired.append("b"))
+    eng.schedule(3.0, lambda: fired.append("c"))
+    h2.cancel()
+    assert len(eng._q) == 3          # lazy: entry stays queued
+    eng.run(until=10.0)
+    assert fired == ["a", "c"]
+    assert eng.n_cancelled == 1
+    assert not h1.cancelled
+
+
+def test_schedule_returns_monotone_handles():
+    eng = Engine(tiny_spec())
+    h = eng.schedule(0.5, lambda: None)
+    assert h.t == pytest.approx(0.5)
+    h2 = eng.schedule_at(4.0, lambda: None)
+    assert h2.t == pytest.approx(4.0)
+
+
+def test_client_rng_streams_are_stable_and_independent():
+    e1, e2 = Engine(tiny_spec(), seed=3), Engine(tiny_spec(), seed=3)
+    a1 = [e1.client_rng("alice").random() for _ in range(5)]
+    # interleave a different client's draws — must not perturb alice
+    [e2.client_rng("bob").random() for _ in range(100)]
+    a2 = [e2.client_rng("alice").random() for _ in range(5)]
+    assert a1 == a2
+    e3 = Engine(tiny_spec(), seed=4)
+    assert a1 != [e3.client_rng("alice").random() for _ in range(5)]
+
+
+# ---------------------------------------------------------------------------
+# jit buckets
+# ---------------------------------------------------------------------------
+
+
+def test_jit_bucket_values():
+    assert [jit_bucket(n) for n in (1, 15, 16, 17, 100)] == \
+        [16, 16, 16, 32, 128]
+    assert [jit_bucket(n, min_bucket=1) for n in (1, 2, 3, 4, 5)] == \
+        [1, 2, 4, 4, 8]
+    # bucketed lengths are always powers of two and >= n
+    for n in range(1, 300):
+        b = jit_bucket(n)
+        assert b >= n and b & (b - 1) == 0
+
+
+def test_fraud_svm_scores_invariant_to_padding():
+    q = FraudSVMQuery(Component("spe", "JAXSTREAM", {"dim": 8},
+                                name="spe_t"))
+
+    class _R:
+        def __init__(self, x):
+            self.payload = {"x": x}
+            self.size = 64
+
+    rng = np.random.default_rng(5)
+    xs = [rng.normal(0, 1, 8).tolist() for _ in range(21)]
+    # full batch (pads 21 -> 32) vs one-at-a-time (pads 1 -> 16)
+    [(full, _)] = q(None, None, [_R(x) for x in xs])
+    singles = [q(None, None, [_R(x)])[0][0]["scores"][0] for x in xs]
+    assert np.allclose(full["scores"], singles, atol=1e-5)
+    assert full["n"] == 21

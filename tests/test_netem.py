@@ -2,7 +2,10 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# real hypothesis when installed, deterministic fixed-seed sampler when
+# not — the tier-1 suite must run everywhere (see tests/_hyp.py)
+from _hyp import given, settings, strategies as st
 
 from repro.core.netem import LinkCfg, Network, one_big_switch
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.optim import (
     AdamW, OptConfig, clip_by_global_norm, cosine_warmup, dequantize_int8,
@@ -100,8 +100,10 @@ def test_compressed_pod_allreduce_shard_map():
                                               "pod")
         return avg["w"][None], new_e["w"][None]
 
-    sharded = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                            out_specs=(P("pod"), P("pod")),
-                            check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+    sharded = shard_map_compat(f, mesh=mesh,
+                               in_specs=(P("pod"), P("pod")),
+                               out_specs=(P("pod"), P("pod")),
+                               check_vma=False)
     avg, _ = sharded(g_local, jnp.zeros((2, 8)))
     np.testing.assert_allclose(np.asarray(avg), 2.0, rtol=1e-2)

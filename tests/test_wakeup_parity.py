@@ -1,0 +1,164 @@
+"""Delivery-mode parity: polling vs event-driven wakeups.
+
+The wakeup hot path must be a pure *scheduling* optimization: for a fixed
+seed, SPE outputs, protocol events (elections, ISR changes, truncations),
+and zk/kraft loss outcomes must be identical to the legacy polling path.
+Per-client RNG streams (``Engine.client_rng``) make this testable — how
+often a consumer fetches cannot perturb producer schedules or the
+produce-side loss draws.
+"""
+import pytest
+
+from repro.core import Engine, PipelineSpec
+
+# produce-side / protocol events that must be bit-identical across modes
+PROTOCOL_KINDS = (
+    "leader_elected", "preferred_leader_restored", "isr_shrink",
+    "isr_expand", "msg_truncated", "msg_expired", "link_down", "link_up",
+)
+
+FAULT_AT, FAULT_LEN, HORIZON = 30.0, 30.0, 130.0
+
+
+def protocol_events(mon):
+    return [e for e in mon.events if e["kind"] in PROTOCOL_KINDS]
+
+
+# ---------------------------------------------------------------------------
+# SPE output parity (word-count pipeline, stateful count across records)
+# ---------------------------------------------------------------------------
+
+
+def word_count_spec(delivery):
+    docs = ["to be or not to be", "be the change", "stream all things",
+            "not all who wander are lost"]
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    for h in ["b", "h1", "h2", "h3", "h4"]:
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker("b")
+    for t in ["raw", "words", "counts"]:
+        spec.add_topic(t, leader="b")
+    spec.add_producer("h1", "DIRECTORY", topic="raw", docs=docs,
+                      totalMessages=8, interval=0.3)
+    spec.add_spe("h2", query="split", inTopic="raw", outTopic="words",
+                 pollInterval=0.05)
+    spec.add_spe("h3", query="count", inTopic="words", outTopic="counts",
+                 pollInterval=0.05)
+    spec.add_consumer("h4", "METRICS", topic="counts", pollInterval=0.05)
+    return spec
+
+
+def run_word_count(delivery, seed=0):
+    eng = Engine(word_count_spec(delivery), seed=seed)
+    mon = eng.run(until=20.0)
+    sink = [rt for rt in eng.runtimes if rt.name.startswith("consumer")][0]
+    spes = sorted((rt for rt in eng.runtimes if rt.name.startswith("spe")),
+                  key=lambda rt: rt.name)
+    return eng, mon, sink, spes
+
+
+def test_spe_outputs_identical_across_modes():
+    _, mon_p, sink_p, spes_p = run_word_count("poll")
+    _, mon_w, sink_w, spes_w = run_word_count("wakeup")
+    assert sink_p.payloads == sink_w.payloads
+    assert sink_p.payloads, "sink must actually receive results"
+    for sp, sw in zip(spes_p, spes_w):
+        assert sp.outputs == sw.outputs
+        assert sp.n_processed == sw.n_processed
+
+
+def test_wakeup_uses_fewer_events_for_same_outputs():
+    eng_p, _, sink_p, _ = run_word_count("poll")
+    eng_w, _, sink_w, _ = run_word_count("wakeup")
+    assert sink_p.payloads == sink_w.payloads
+    assert eng_w.n_events < eng_p.n_events
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 partition parity (zk silent loss / kraft no-loss outcomes)
+# ---------------------------------------------------------------------------
+
+
+def partition_spec(mode, delivery, sites=6):
+    spec = PipelineSpec(mode=mode, delivery=delivery)
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, sites + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(h)
+    spec.add_topic("topicA", leader="h1", replication=3)
+    spec.add_topic("topicB", leader="h2", replication=3)
+    for h in hosts:
+        spec.add_producer(h, "SYNTHETIC", topics=["topicA", "topicB"],
+                          rateKbps=30.0, msgSize=512)
+        spec.add_consumer(h, "STANDARD", topics=["topicA", "topicB"],
+                          pollInterval=0.5)
+    spec.add_fault(FAULT_AT, "link_down", "h1", "s1", duration=FAULT_LEN)
+    return spec
+
+
+def run_partition(mode, delivery, seed=7):
+    eng = Engine(partition_spec(mode, delivery), seed=seed)
+    mon = eng.run(until=HORIZON)
+    return eng, mon
+
+
+def loss_count(eng, mon, topic, t_hi=HORIZON - 40):
+    nc = len(eng.consumers_named())
+    return sum(1 for m in mon.msgs.values()
+               if m.topic == topic and m.produce_time <= t_hi
+               and len(m.deliveries) < nc)
+
+
+@pytest.fixture(scope="module")
+def zk_runs():
+    return run_partition("zk", "poll"), run_partition("zk", "wakeup")
+
+
+def test_zk_truncation_sets_identical(zk_runs):
+    (_, mon_p), (_, mon_w) = zk_runs
+    trunc_p = {m.msg_id: m.truncated_time for m in mon_p.msgs.values()
+               if m.truncated_time is not None}
+    trunc_w = {m.msg_id: m.truncated_time for m in mon_w.msgs.values()
+               if m.truncated_time is not None}
+    assert trunc_p, "zk partition must truncate (Fig. 6b)"
+    assert trunc_p == trunc_w
+
+
+def test_zk_loss_counts_identical(zk_runs):
+    (eng_p, mon_p), (eng_w, mon_w) = zk_runs
+    assert loss_count(eng_p, mon_p, "topicA") == \
+        loss_count(eng_w, mon_w, "topicA")
+    assert loss_count(eng_p, mon_p, "topicB") == \
+        loss_count(eng_w, mon_w, "topicB")
+    assert loss_count(eng_p, mon_p, "topicA") > 0
+
+
+def test_zk_protocol_event_stream_identical(zk_runs):
+    (_, mon_p), (_, mon_w) = zk_runs
+    assert protocol_events(mon_p) == protocol_events(mon_w)
+
+
+def test_zk_produce_side_message_stats_identical(zk_runs):
+    (_, mon_p), (_, mon_w) = zk_runs
+    assert set(mon_p.msgs) == set(mon_w.msgs)
+    for mid, mp in mon_p.msgs.items():
+        mw = mon_w.msgs[mid]
+        assert (mp.topic, mp.producer, mp.size) == \
+            (mw.topic, mw.producer, mw.size)
+        assert mp.produce_time == mw.produce_time
+        assert mp.ack_time == mw.ack_time
+        assert mp.expired_time == mw.expired_time
+
+
+def test_kraft_no_loss_in_both_modes():
+    (eng_p, mon_p) = run_partition("kraft", "poll")
+    (eng_w, mon_w) = run_partition("kraft", "wakeup")
+    for mon in (mon_p, mon_w):
+        assert sum(1 for m in mon.msgs.values()
+                   if m.truncated_time is not None) == 0
+    assert loss_count(eng_p, mon_p, "topicA") == \
+        loss_count(eng_w, mon_w, "topicA") <= 2
+    assert protocol_events(mon_p) == protocol_events(mon_w)
