@@ -15,6 +15,11 @@ rate.  The headline ``speedup`` is wall(poll) / wall(wakeup) for the
 *same* simulated work (both modes deliver every message), which is the
 events/sec improvement of the hot path.
 
+Since PR 2 the figure is a thin sweep definition: a one-axis
+``SweepSpec`` over ``delivery`` executed by ``repro.sweep.runner`` —
+serially (``workers=1``), because the two wall times are compared
+against each other and must not contend for cores.
+
 Output contract (consumed by CI and tracked across PRs):
 ``BENCH_engine.json`` — see ``benchmarks/run.py`` for the schema.
 """
@@ -24,13 +29,13 @@ import argparse
 import json
 import os
 import sys
-import time
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)               # `python benchmarks/...py` works
 
-from repro.core import Engine, PipelineSpec  # noqa: E402
+from repro.core import PipelineSpec  # noqa: E402
+from repro.sweep import SweepSpec, run_sweep  # noqa: E402
 from benchmarks.common import emit  # noqa: E402
 
 N_BROKERS = 3
@@ -38,7 +43,7 @@ N_TOPICS = 10
 REPLICATION = 3
 
 
-def build(delivery: str, *, n_hosts: int = 50, horizon: float = 120.0,
+def build(delivery: str, *, n_hosts: int = 50,
           poll_interval: float = 0.1, rate_kbps: float = 0.5
           ) -> PipelineSpec:
     """50 hosts: 3 brokers + 10 producers + 37 consumers on one switch."""
@@ -68,44 +73,46 @@ def build(delivery: str, *, n_hosts: int = 50, horizon: float = 120.0,
     return spec
 
 
-def run_mode(delivery: str, repeats: int = 3, **kw) -> dict:
-    """Run the scenario; keep the best-of-N wall time (events are
-    deterministic across repeats, wall time is not on a loaded host)."""
-    horizon = kw.pop("horizon", 120.0)
-    wall = float("inf")
-    for _ in range(repeats):
-        spec = build(delivery, horizon=horizon, **kw)
-        eng = Engine(spec, seed=0)
-        t0 = time.perf_counter()
-        mon = eng.run(until=horizon)
-        wall = min(wall, time.perf_counter() - t0)
-    delivered = sum(len(m.deliveries) for m in mon.msgs.values())
-    return {
-        "wall_s": wall,
-        "sim_s": horizon,
-        "engine_events": eng.n_events,
-        "events_per_wall_s": eng.n_events / wall,
-        "records_produced": len(mon.msgs),
-        "records_delivered": delivered,
-        "records_per_wall_s": delivered / wall,
-        "sim_s_per_wall_s": horizon / wall,
-    }
+def throughput_builder(p: dict) -> PipelineSpec:
+    """Sweep builder: one delivery-mode variant of the 50-node scenario."""
+    return build(p["delivery"], n_hosts=int(p["n_hosts"]),
+                 poll_interval=float(p.get("poll_interval", 0.1)),
+                 rate_kbps=float(p.get("rate_kbps", 0.5)))
 
 
 def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
-    kw = dict(n_hosts=20, horizon=30.0) if smoke else {}
+    n_hosts = 20 if smoke else 50
+    horizon = 30.0 if smoke else 120.0
     results = {
         "scenario": {
-            "n_hosts": kw.get("n_hosts", 50),
+            "n_hosts": n_hosts,
             "n_topics": N_TOPICS,
             "n_brokers": N_BROKERS,
             "replication": REPLICATION,
-            "horizon_sim_s": kw.get("horizon", 120.0),
+            "horizon_sim_s": horizon,
             "smoke": smoke,
         },
     }
-    for mode in ("poll", "wakeup"):
-        results[mode] = run_mode(mode, **kw)
+    sweep = SweepSpec(
+        name="engine_throughput",
+        axes={"delivery": ["poll", "wakeup"]},
+        base={"n_hosts": n_hosts, "horizon": horizon, "seed": 0},
+        builder=throughput_builder,
+        repeats=3)       # best-of-3 wall; events deterministic per mode
+    res = run_sweep(sweep, workers=1, cache_dir=None)
+    for row in res.rows:
+        m, mode = row["metrics"], row["params"]["delivery"]
+        wall = m["wall_s"]
+        results[mode] = {
+            "wall_s": wall,
+            "sim_s": m["sim_s"],
+            "engine_events": m["engine_events"],
+            "events_per_wall_s": m["engine_events"] / wall,
+            "records_produced": m["records_produced"],
+            "records_delivered": m["records_delivered"],
+            "records_per_wall_s": m["records_delivered"] / wall,
+            "sim_s_per_wall_s": m["sim_s"] / wall,
+        }
         emit(f"engine/{mode}", results[mode]["wall_s"] * 1e6,
              f"events={results[mode]['engine_events']};"
              f"rec_per_s={results[mode]['records_per_wall_s']:.0f};"

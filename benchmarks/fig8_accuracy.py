@@ -5,14 +5,26 @@ CPU-only container the "ground truth" stand-in is the closed-form
 pipeline-latency model (sum of per-hop propagation, serialization and
 service times along the critical path) — the emulator must match it
 within a small tolerance while sweeping broker and SPE link delays.
+
+Since PR 2 the figure is a thin sweep definition: an 80-scenario grid
+(delivery x component x delay x 5 seed repetitions) fanned across
+worker processes by ``repro.sweep.runner``; the per-group pooled mean
+uses the structured ``e2e_sum``/``e2e_count`` metrics, so it equals the
+old single-process pooled-latency mean exactly.
 """
 from __future__ import annotations
 
-import numpy as np
+import os
+import sys
 
-from benchmarks.common import emit, run_spec, word_count_spec
-from repro.core.stubs import PER_BYTE_S, PER_RECORD_S
-from repro.core.spe import WINDOW_BASE_S
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)               # `python benchmarks/...py` works
+
+from benchmarks.common import emit, word_count_spec  # noqa: E402
+from repro.core.stubs import PER_BYTE_S, PER_RECORD_S  # noqa: E402
+from repro.core.spe import WINDOW_BASE_S  # noqa: E402
+from repro.sweep import SweepSpec, run_sweep  # noqa: E402
 
 DELAYS_MS = [10, 50, 100, 150]
 
@@ -47,24 +59,44 @@ def analytic_e2e(broker_ms: float, spe1_ms: float, *, doc_bytes: int,
     return t
 
 
-def run() -> dict:
+def fig8_builder(p: dict):
+    """Sweep builder: the Fig. 2a word-count pipeline, one delay point."""
+    host = "h2" if p["comp"] == "broker" else "h3"
+    spec, _ = word_count_spec(delays={host: float(p["delay_ms"])},
+                              n_files=40, delivery=p["delivery"])
+    return spec
+
+
+def _derive(p: dict) -> dict:
+    # poll phases are drawn once per run: average over 5 seeds per point
+    p["seed"] = 1000 * p["rep"] + p["delay_ms"]
+    return p
+
+
+def run(*, workers: int = 2) -> dict:
+    sweep = SweepSpec(
+        name="fig8_accuracy",
+        axes={"delivery": ["poll", "wakeup"],
+              "comp": ["broker", "spe"],
+              "delay_ms": DELAYS_MS,
+              "rep": list(range(5))},
+        base={"horizon": 40.0},
+        builder=fig8_builder,
+        derive=_derive)
+    res = run_sweep(sweep, workers=workers, cache_dir=None)
     out = {}
     doc_bytes = 45
     for delivery in ("poll", "wakeup"):
         curves = out[delivery] = {"broker": [], "spe": []}
-        for comp, host in [("broker", "h2"), ("spe", "h3")]:
+        for comp in ("broker", "spe"):
             for d in DELAYS_MS:
-                # poll phases are drawn once per run: average over seeds
-                lats, wall = [], 0.0
-                for seed in range(5):
-                    spec, _ = word_count_spec(delays={host: float(d)},
-                                              n_files=40,
-                                              delivery=delivery)
-                    _, mon, w = run_spec(spec, until=40.0,
-                                         seed=1000 * seed + d)
-                    lats.extend(mon.e2e_latency())
-                    wall += w
-                emul = float(np.mean(lats))
+                rows = [r for r in res.rows
+                        if r["params"]["delivery"] == delivery
+                        and r["params"]["comp"] == comp
+                        and r["params"]["delay_ms"] == d]
+                emul = sum(r["metrics"]["e2e_sum"] for r in rows) / \
+                    sum(r["metrics"]["e2e_count"] for r in rows)
+                wall = sum(r["metrics"]["wall_s"] for r in rows)
                 model = analytic_e2e(
                     broker_ms=d if comp == "broker" else 2.0,
                     spe1_ms=d if comp == "spe" else 2.0,

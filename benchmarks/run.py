@@ -21,6 +21,14 @@ perf-trajectory record tracked across PRs.  Schema::
 event pattern), ``wakeup`` the batched event-driven hot path; both modes
 must report identical ``records_delivered`` (asserted), so the wall-time
 ratio is a pure scheduler-throughput measurement.
+
+``sweep_scale`` additionally writes ``BENCH_sweep_scale.json`` (schema
+in ``benchmarks/sweep_scale.py``): the 100-400-node generated-topology
+scale record plus the reachability-cache before/after gate (identical
+engine event counts, ``probe_reduction`` on graph recomputations).
+
+``engine_throughput``, ``fig8_accuracy`` and ``sweep_scale`` are thin
+``repro.sweep`` definitions — grids executed by the sweep runner.
 """
 from __future__ import annotations
 
@@ -32,7 +40,8 @@ import traceback
 def main() -> None:
     from benchmarks import (engine_throughput, fig5_link_delay,
                             fig6_partition, fig7_reproductions,
-                            fig8_accuracy, fig9_resources, roofline_table)
+                            fig8_accuracy, fig9_resources, roofline_table,
+                            sweep_scale)
     mods = [
         ("engine_throughput", engine_throughput),
         ("fig5_link_delay", fig5_link_delay),
@@ -41,6 +50,7 @@ def main() -> None:
         ("fig8_accuracy", fig8_accuracy),
         ("fig9_resources", fig9_resources),
         ("roofline_table", roofline_table),
+        ("sweep_scale", sweep_scale),
     ]
     failures = 0
     for name, mod in mods:

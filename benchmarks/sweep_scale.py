@@ -1,0 +1,142 @@
+"""Scale benchmark: generated topologies at 100-400 emulated nodes.
+
+Demonstrates the "several hundred emulated nodes" scale target on
+sweep-generated geo-WAN topologies: 3 replicated brokers, 10 synthetic
+producers, every remaining host a consumer, plus a mid-run broker
+partition (elections + ISR churn exercise the controller loop and the
+reachability-cache invalidation path).
+
+Two claims, both recorded in ``BENCH_sweep_scale.json``:
+
+1. **Scale** — scenarios at each size complete through the sweep runner
+   (serial: wall times are the measurement).
+2. **Reachability caching** — the per-network-epoch memoization in
+   ``repro.core.netem.Network`` (connected components for
+   ``reachable``, per-source SSSP for routes) collapses the controller's
+   O(topics x brokers) probe loop and the per-message route lookups.
+   The before/after pair runs the identical scenario with the cache off
+   and on via the ``reach_cache`` scenario knob; the gate **asserts the
+   engine event counts are identical** (caching must not change
+   simulation behavior) and reports ``probe_reduction`` — expensive
+   graph recomputations before / after.
+
+Schema::
+
+    {
+      "sizes": {n: {engine_events, wall_s, sim_s_per_wall_s,
+                    records_delivered, elections, reach_queries,
+                    path_queries, reach_computes}},
+      "reach_cache_compare": {n_hosts, horizon_sim_s,
+                              events_uncached, events_cached,
+                              computes_uncached, computes_cached,
+                              probe_reduction, events_equal}
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from repro.sweep import SweepSpec, run_sweep  # noqa: E402
+from benchmarks.common import emit  # noqa: E402
+
+# caching must not change behavior, only skip recomputation: asserted on
+# the compare pair; well below the observed reduction to avoid flaking
+MIN_PROBE_REDUCTION = 5.0
+
+
+def scale_base(horizon: float) -> dict:
+    return {
+        "topology": "geo_wan",
+        "topo": {"extra_edge_frac": 0.25},
+        "n_brokers": 3, "replication": 3, "n_topics": 10,
+        "n_producers": 10, "rate_kbps": 8.0, "msg_size": 512,
+        "poll_interval": 0.2, "delivery": "wakeup",
+        "fault": "partition", "fault_at": horizon * 0.3,
+        "fault_duration": horizon * 0.2,
+        "horizon": horizon, "seed": 0,
+    }
+
+
+def run(*, smoke: bool = False, full: bool = False,
+        out: str = "BENCH_sweep_scale.json") -> dict:
+    sizes = [60] if smoke else ([100, 200, 400] if full else [100, 200])
+    horizon = 8.0 if smoke else 20.0
+    results: dict = {"sizes": {}}
+
+    size_sweep = SweepSpec(
+        name="sweep_scale",
+        axes={"n_hosts": sizes},
+        base=scale_base(horizon))
+    res = run_sweep(size_sweep, workers=1, cache_dir=None)
+    for row in res.rows:
+        n, m = row["params"]["n_hosts"], row["metrics"]
+        results["sizes"][n] = {
+            "engine_events": m["engine_events"],
+            "wall_s": m["wall_s"],
+            "sim_s_per_wall_s": m["sim_s"] / m["wall_s"],
+            "records_delivered": m["records_delivered"],
+            "elections": m["elections"],
+            "reach_queries": m["reach_queries"],
+            "path_queries": m["path_queries"],
+            "reach_computes": m["reach_computes"],
+        }
+        emit(f"sweep_scale/{n}nodes", m["wall_s"] * 1e6,
+             f"events={m['engine_events']};"
+             f"delivered={m['records_delivered']};"
+             f"reach_computes={m['reach_computes']};"
+             f"sim_rate={m['sim_s'] / m['wall_s']:.1f}x")
+
+    # before/after reachability caching on one identical scenario
+    cmp_n = 60 if smoke else 200
+    cmp_h = 4.0 if smoke else 6.0
+    pair_sweep = SweepSpec(
+        name="sweep_scale_reach_cache",
+        axes={"reach_cache": [False, True]},
+        base={**scale_base(cmp_h), "n_hosts": cmp_n})
+    pair = {row["params"]["reach_cache"]: row["metrics"]
+            for row in run_sweep(pair_sweep, workers=1, cache_dir=None).rows}
+    before, after = pair[False], pair[True]
+    assert before["engine_events"] == after["engine_events"], \
+        "reachability caching changed simulation behavior " \
+        f"({before['engine_events']} != {after['engine_events']} events)"
+    reduction = before["reach_computes"] / max(1, after["reach_computes"])
+    assert reduction >= MIN_PROBE_REDUCTION, \
+        f"reachability cache regressed: {reduction:.1f}x < " \
+        f"{MIN_PROBE_REDUCTION}x probe reduction"
+    results["reach_cache_compare"] = {
+        "n_hosts": cmp_n,
+        "horizon_sim_s": cmp_h,
+        "events_uncached": before["engine_events"],
+        "events_cached": after["engine_events"],
+        "computes_uncached": before["reach_computes"],
+        "computes_cached": after["reach_computes"],
+        "probe_reduction": reduction,
+        "events_equal": True,
+    }
+    emit("sweep_scale/reach_cache", 0.0,
+         f"probe_reduction={reduction:.0f}x;"
+         f"events={after['engine_events']};"
+         f"wall_uncached={before['wall_s']:.1f}s;"
+         f"wall_cached={after['wall_s']:.1f}s")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (60 nodes)")
+    ap.add_argument("--full", action="store_true",
+                    help="include the 400-node scenario")
+    ap.add_argument("--out", default="BENCH_sweep_scale.json")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke, full=args.full, out=args.out)
+    print(json.dumps(res["reach_cache_compare"], indent=2))

@@ -417,7 +417,12 @@ class Cluster:
         eng = self.engine
         meta = self.topics[rec.topic]
         rep_rng = eng.client_rng("cluster:replication")
-        for b in [x for x in meta.isr if x != broker]:
+        # iterate in replicas order, not set order: the shared rep_rng
+        # stream makes follower order part of the deterministic contract
+        # (ISR is always a subset of replicas), and set order varies with
+        # per-process hash randomization — sweep caching would diverge.
+        for b in [x for x in meta.replicas if x in meta.isr
+                  and x != broker]:
             delay, lost = eng.net.transfer(broker, b, rec.size, rep_rng)
             if delay is None or lost:
                 continue   # follower unreachable; controller manages ISR
@@ -612,7 +617,10 @@ class Cluster:
         leader = meta.leader
         if ctrl is None or not net.reachable(ctrl, leader):
             return      # ISR changes must go through the controller
-        for b in list(meta.isr):
+        # replicas order, not set order (same determinism contract as
+        # _replicate: shrink events and commit/notify order must not
+        # depend on per-process hash randomization)
+        for b in [x for x in meta.replicas if x in meta.isr]:
             if b != leader and not net.reachable(leader, b):
                 meta.isr.discard(b)
                 self._maybe_commit(meta.name)

@@ -33,8 +33,11 @@ from __future__ import annotations
 
 import heapq
 import random
+import time
 import zlib
 from typing import Callable, Optional
+
+import numpy as np
 
 from repro.core.broker import Cluster
 from repro.core.monitor import Monitor
@@ -191,6 +194,70 @@ class Engine:
             h.fn()
         self.now = until
         return self.monitor
+
+    # ------------------------------------------------------------------
+    # Structured metrics (the sweep runner's result contract)
+    # ------------------------------------------------------------------
+
+    def run_metrics(self, until: float) -> dict:
+        """Run to ``until`` and return :meth:`metrics` (with wall time)."""
+        t0 = time.perf_counter()
+        self.run(until=until)
+        return self.metrics(wall_s=time.perf_counter() - t0)
+
+    def metrics(self, *, wall_s: Optional[float] = None) -> dict:
+        """One flat, JSON-serializable summary of a finished run.
+
+        Every field except ``wall_s`` is deterministic for a fixed (spec,
+        seed) — sweep caching, resume-equality tests and the CI gates all
+        rely on that (``repro.sweep.results.TIMING_KEYS`` names the
+        nondeterministic ones).
+        """
+        mon = self.monitor
+        # a message is lost/partial against its topic's *subscribers*
+        # (consumers follow topic subsets; see Monitor.loss_report for
+        # the all-consumers variant used by the Fig. 6 experiments)
+        n_subs = {t: len(cs) for t, cs in self.cluster.subs.items()}
+        delivered = expired = truncated = lost = 0
+        lats: list[float] = []
+        for m in mon.msgs.values():
+            delivered += len(m.deliveries)
+            expired += m.expired_time is not None
+            truncated += m.truncated_time is not None
+            expected = n_subs.get(m.topic, 0)
+            if expected and len(m.deliveries) < expected:
+                lost += 1
+            for t in m.deliveries.values():
+                lats.append(t - m.produce_time)
+        e2e = mon.e2e_latency()
+        util = self.resource_report()
+        return {
+            "sim_s": self.now,
+            "wall_s": wall_s,
+            "engine_events": self.n_events,
+            "events_scheduled": self.n_scheduled,
+            "events_cancelled": self.n_cancelled,
+            "records_produced": len(mon.msgs),
+            "records_delivered": delivered,
+            "records_expired": int(expired),
+            "records_truncated": int(truncated),
+            "lost_or_partial": lost,
+            "elections": len(mon.events_of("leader_elected")),
+            "isr_changes": len(mon.events_of("isr_shrink"))
+            + len(mon.events_of("isr_expand")),
+            "latency_count": len(lats),
+            "latency_mean": float(np.mean(lats)) if lats else 0.0,
+            "latency_p50": float(np.percentile(lats, 50)) if lats else 0.0,
+            "latency_p99": float(np.percentile(lats, 99)) if lats else 0.0,
+            "e2e_count": len(e2e),
+            "e2e_sum": float(sum(e2e)),
+            "e2e_mean": float(sum(e2e) / len(e2e)) if e2e else 0.0,
+            "reach_queries": self.net.n_reach_queries,
+            "path_queries": self.net.n_path_queries,
+            "reach_computes": self.net.n_graph_builds,
+            "max_util_pct": max(
+                (h["util_pct"] for h in util.values()), default=0.0),
+        }
 
     # ------------------------------------------------------------------
     # Compute model hooks

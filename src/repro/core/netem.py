@@ -54,27 +54,52 @@ class LinkCfg:
 
 
 class Network:
-    """Topology + reachability + message timing."""
+    """Topology + reachability + message timing.
+
+    Reachability and routes are memoized **per network epoch**: the epoch
+    counter bumps on every topology transition (link/host up-down, new
+    links), which invalidates a connected-components map (O(1)
+    ``reachable`` lookups — the controller's O(topics × brokers) probe
+    loop stops dominating at several hundred nodes) and a per-source
+    single-source-shortest-path cache (one Dijkstra per traffic source
+    per epoch instead of one per message).  ``reach_cache=False`` keeps
+    the exact same algorithms but recomputes on every query — the
+    "before" baseline the scale benchmark compares against; results must
+    be bit-identical either way (asserted there via engine event counts).
+    """
 
     def __init__(self) -> None:
         self.g = nx.Graph()
         self._host_up: dict[str, bool] = {}
-        self._paths_dirty = True
-        self._path_cache: dict[tuple[str, str], Optional[list[str]]] = {}
+        self.reach_cache = True     # per-epoch memoization toggle
+        self.epoch = 0              # bumps on every topology transition
+        self._live: Optional[nx.Graph] = None
+        self._comp_id: Optional[dict[str, int]] = None
+        self._sssp: dict[str, dict[str, list[str]]] = {}
+        # instrumentation (benchmarks / regression gates)
+        self.n_reach_queries = 0    # reachable() calls
+        self.n_path_queries = 0     # path() calls
+        self.n_graph_builds = 0     # expensive recomputes (SSSP/components)
+
+    def _invalidate(self) -> None:
+        self.epoch += 1
+        self._live = None
+        self._comp_id = None
+        self._sssp.clear()
 
     # --- construction ----------------------------------------------------
 
     def add_host(self, name: str) -> None:
         self.g.add_node(name)
         self._host_up[name] = True
-        self._paths_dirty = True
+        self._invalidate()
 
     def add_link(self, a: str, b: str, cfg: Optional[LinkCfg] = None) -> None:
         for n in (a, b):
             if n not in self.g:
                 self.add_host(n)
         self.g.add_edge(a, b, cfg=cfg or LinkCfg())
-        self._paths_dirty = True
+        self._invalidate()
 
     def link(self, a: str, b: str) -> LinkCfg:
         return self.g.edges[a, b]["cfg"]
@@ -86,43 +111,63 @@ class Network:
 
     def set_link_up(self, a: str, b: str, up: bool) -> None:
         self.link(a, b).up = up
-        self._paths_dirty = True
+        self._invalidate()
 
     def set_host_up(self, name: str, up: bool) -> None:
         self._host_up[name] = up
-        self._paths_dirty = True
+        self._invalidate()
 
     def host_up(self, name: str) -> bool:
         return self._host_up.get(name, False)
 
     # --- reachability / timing ---------------------------------------------
 
-    def _live_subgraph(self) -> nx.Graph:
-        live = nx.Graph()
-        for n in self.g.nodes:
-            if self._host_up.get(n, True):
-                live.add_node(n)
-        for a, b, d in self.g.edges(data=True):
-            if d["cfg"].up and live.has_node(a) and live.has_node(b):
-                live.add_edge(a, b, weight=d["cfg"].lat_ms)
-        return live
+    def _live_graph(self) -> nx.Graph:
+        if self._live is None:
+            live = nx.Graph()
+            for n in self.g.nodes:
+                if self._host_up.get(n, True):
+                    live.add_node(n)
+            for a, b, d in self.g.edges(data=True):
+                if d["cfg"].up and live.has_node(a) and live.has_node(b):
+                    live.add_edge(a, b, weight=d["cfg"].lat_ms)
+            self._live = live
+        return self._live
+
+    def _components(self) -> dict[str, int]:
+        if self._comp_id is None:
+            self.n_graph_builds += 1
+            self._comp_id = {}
+            for i, comp in enumerate(
+                    nx.connected_components(self._live_graph())):
+                for n in comp:
+                    self._comp_id[n] = i
+        return self._comp_id
 
     def path(self, src: str, dst: str) -> Optional[list[str]]:
         """Lowest-latency live path, or None if partitioned."""
-        if self._paths_dirty:
-            self._path_cache.clear()
-            self._paths_dirty = False
-        key = (src, dst)
-        if key not in self._path_cache:
+        self.n_path_queries += 1
+        if not self.reach_cache:        # baseline: recompute every query
+            self._live = None
+            self._sssp.clear()
+        paths = self._sssp.get(src)
+        if paths is None:
+            self.n_graph_builds += 1
             try:
-                self._path_cache[key] = nx.shortest_path(
-                    self._live_subgraph(), src, dst, weight="weight")
-            except (nx.NetworkXNoPath, nx.NodeNotFound):
-                self._path_cache[key] = None
-        return self._path_cache[key]
+                paths = nx.single_source_dijkstra_path(
+                    self._live_graph(), src, weight="weight")
+            except nx.NodeNotFound:     # src host is down
+                paths = {}
+            self._sssp[src] = paths
+        return paths.get(dst)
 
     def reachable(self, src: str, dst: str) -> bool:
-        return self.path(src, dst) is not None
+        self.n_reach_queries += 1
+        if not self.reach_cache:
+            return self.path(src, dst) is not None
+        comp = self._components()
+        ci = comp.get(src)
+        return ci is not None and ci == comp.get(dst)
 
     def transfer(self, src: str, dst: str, nbytes: int,
                  rng: Optional[random.Random] = None

@@ -95,6 +95,31 @@ class PipelineSpec:
     # Builder API
     # ------------------------------------------------------------------
 
+    @classmethod
+    def from_topology(cls, g: "nx.Graph", *, mode: str = "zk",
+                      delivery: str = "wakeup") -> "PipelineSpec":
+        """Build a spec from a generated topology graph.
+
+        ``g`` follows the ``repro.sweep.topologies`` contract: nodes carry
+        ``kind`` ("host" or "switch", default host) and edges carry a
+        ``cfg`` :class:`LinkCfg`.  Components and topics are added on top
+        by the caller (or by ``repro.sweep.scenarios.build_scenario``).
+        """
+        spec = cls(mode=mode, delivery=delivery)
+        for n, attrs in g.nodes(data=True):
+            if attrs.get("kind", "host") == "switch":
+                spec.add_switch(n)
+            else:
+                spec.add_host(
+                    n, n_cores=int(attrs.get("n_cores", 8)),
+                    cpu_percentage=float(attrs.get("cpu_percentage", 100.0)))
+        for a, b, d in g.edges(data=True):
+            cfg = d.get("cfg") or LinkCfg()
+            spec.add_link(a, b, lat=cfg.lat_ms, bw=cfg.bw_mbps,
+                          loss=cfg.loss_pct, st=cfg.src_port,
+                          dt=cfg.dst_port)
+        return spec
+
     def add_host(self, name: str, *, n_cores: int = 8,
                  cpu_percentage: float = 100.0) -> "PipelineSpec":
         if name not in self.hosts:
@@ -215,12 +240,24 @@ def _load_cfg(value: str, base_dir: str) -> dict:
     return parsed if isinstance(parsed, dict) else {"value": parsed}
 
 
-def from_graphml(path: str, *, mode: str = "zk",
-                 delivery: str = "wakeup") -> PipelineSpec:
-    """Parse a paper-style GraphML description (plus side YAML files)."""
+def from_graphml(path: str, *, mode: Optional[str] = None,
+                 delivery: Optional[str] = None) -> PipelineSpec:
+    """Parse a paper-style GraphML description (plus side YAML files).
+
+    Table I parity: besides ``topicCfg``/``faultCfg``, graph-level
+    attributes may select ``mode`` ("zk"/"kraft"), ``delivery``
+    ("wakeup"/"poll") and a default ``brokerCfg`` (YAML file or inline
+    YAML) applied to every broker node — node-level ``brokerCfg`` entries
+    override the graph-level defaults key-by-key.  Explicit keyword
+    arguments take precedence over graph attributes.
+    """
     g = nx.read_graphml(path)
     base = os.path.dirname(os.path.abspath(path))
+    mode = mode or str(g.graph.get("mode", "zk"))
+    delivery = delivery or str(g.graph.get("delivery", "wakeup"))
     spec = PipelineSpec(mode=mode, delivery=delivery)
+    base_broker_cfg = (_load_cfg(g.graph["brokerCfg"], base)
+                       if "brokerCfg" in g.graph else {})
 
     # graph-level attributes
     if "topicCfg" in g.graph:
@@ -256,7 +293,7 @@ def from_graphml(path: str, *, mode: str = "zk",
             cfg = _load_cfg(attrs.get("storeCfg", "{}"), base)
             spec.add_store(node, attrs["storeType"], **cfg)
         if "brokerCfg" in attrs:
-            cfg = _load_cfg(attrs["brokerCfg"], base)
+            cfg = {**base_broker_cfg, **_load_cfg(attrs["brokerCfg"], base)}
             spec.add_broker(node, **cfg)
 
     for a, b, attrs in g.edges(data=True):

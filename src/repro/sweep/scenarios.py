@@ -1,0 +1,93 @@
+"""Default scenario builder: a flat params dict -> concrete PipelineSpec.
+
+This is the bridge between a declarative :class:`~repro.sweep.grid.
+SweepSpec` grid point and a runnable pipeline: a generated topology
+(``repro.sweep.topologies``), brokers/topics/producers/consumers placed
+over its hosts, uniform link-loss and named fault-pattern knobs, plus
+broker/delivery tuning (Table I parity with the GraphML surface).
+
+Recognized params (all optional unless noted):
+
+topology      generator name (default "star"); ``topo`` = extra kwargs;
+              ``topo_seed`` defaults to ``seed``
+n_hosts       REQUIRED — emulated host count (switches come on top)
+n_brokers     brokers on the first hosts (default 3, capped to n_hosts-1)
+replication / n_topics / n_producers / n_consumers
+rate_kbps / msg_size        SYNTHETIC producer knobs
+poll_interval               subscriber cadence (also the wakeup fallback)
+delivery / mode             "wakeup"|"poll", "zk"|"kraft"
+broker_cfg    dict merged into every broker component (Table I brokerCfg)
+loss_pct      uniform extra loss applied to every link
+fault         none | partition | broker_down | gray_loss, shaped by
+              fault_at / fault_duration / fault_loss_pct
+reach_cache   per-epoch reachability memoization toggle (default on;
+              the scale benchmark's before/after axis)
+seed / horizon              consumed by the sweep runner, not here
+"""
+from __future__ import annotations
+
+from repro.core.spec import PipelineSpec
+from repro.sweep import topologies
+
+
+def build_scenario(p: dict) -> PipelineSpec:
+    """Build the pipeline for one grid point (must stay deterministic)."""
+    n_hosts = int(p["n_hosts"])
+    g = topologies.generate(
+        p.get("topology", "star"), n_hosts,
+        seed=int(p.get("topo_seed", p.get("seed", 0))),
+        **dict(p.get("topo", {})))
+    spec = PipelineSpec.from_topology(
+        g, mode=p.get("mode", "zk"), delivery=p.get("delivery", "wakeup"))
+    spec.network.reach_cache = bool(p.get("reach_cache", True))
+    if p.get("loss_pct"):
+        for a, b in spec.network.g.edges:
+            spec.network.link(a, b).loss_pct = float(p["loss_pct"])
+
+    hosts = topologies.hosts_of(g)
+    n_brokers = max(1, min(int(p.get("n_brokers", 3)), n_hosts - 1))
+    brokers = hosts[:n_brokers]
+    for b in brokers:
+        spec.add_broker(b, **dict(p.get("broker_cfg", {})))
+    n_topics = max(1, int(p.get("n_topics", n_brokers)))
+    replication = max(1, min(int(p.get("replication", 1)), n_brokers))
+    topics = [f"t{i}" for i in range(n_topics)]
+    for i, t in enumerate(topics):
+        spec.add_topic(t, leader=brokers[i % n_brokers],
+                       replication=replication)
+
+    rest = hosts[n_brokers:]
+    n_prod = max(1, min(int(p.get("n_producers", n_topics)), len(rest)))
+    for i, h in enumerate(rest[:n_prod]):
+        spec.add_producer(h, "SYNTHETIC", topics=[topics[i % n_topics]],
+                          rateKbps=float(p.get("rate_kbps", 8.0)),
+                          msgSize=int(p.get("msg_size", 512)))
+    consumers = rest[n_prod:]
+    if "n_consumers" in p:
+        consumers = consumers[:int(p["n_consumers"])]
+    for i, h in enumerate(consumers):
+        subs = {topics[i % n_topics], topics[(i + 1) % n_topics]}
+        spec.add_consumer(h, "STANDARD", topics=sorted(subs),
+                          pollInterval=float(p.get("poll_interval", 0.1)))
+    _install_fault(spec, p, brokers)
+    return spec
+
+
+def _install_fault(spec: PipelineSpec, p: dict, brokers: list[str]) -> None:
+    fault = p.get("fault")
+    if not fault or fault == "none":
+        return
+    horizon = float(p.get("horizon", 30.0))
+    at = float(p.get("fault_at", horizon * 0.25))
+    dur = float(p.get("fault_duration", horizon * 0.25))
+    b0 = brokers[0]
+    nbr = sorted(spec.network.g.neighbors(b0))[0]
+    if fault == "partition":
+        spec.add_fault(at, "link_down", b0, nbr, duration=dur)
+    elif fault == "broker_down":
+        spec.add_fault(at, "host_down", brokers[-1], duration=dur)
+    elif fault == "gray_loss":
+        spec.add_fault(at, "gray_loss", b0, nbr, duration=dur,
+                       loss_pct=float(p.get("fault_loss_pct", 30.0)))
+    else:
+        raise ValueError(f"unknown fault pattern {fault!r}")

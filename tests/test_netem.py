@@ -78,3 +78,81 @@ def test_star_all_pairs_reachable(n):
     hosts = [f"h{i}" for i in range(n)]
     net = one_big_switch(hosts)
     assert all(net.reachable(a, b) for a in hosts for b in hosts)
+
+
+# ---------------------------------------------------------------------------
+# Per-epoch reachability memoization (PR 2): cached and uncached modes
+# must agree exactly, across fault transitions; the cache only skips
+# recomputation (the scale benchmark asserts this via engine events too).
+# ---------------------------------------------------------------------------
+
+
+def mesh_net():
+    net = Network()
+    net.add_link("a", "b", LinkCfg(lat_ms=1.0))
+    net.add_link("b", "c", LinkCfg(lat_ms=2.0))
+    net.add_link("a", "c", LinkCfg(lat_ms=5.0))
+    net.add_link("c", "d", LinkCfg(lat_ms=1.0))
+    return net
+
+
+def all_pairs(net):
+    hosts = sorted(net.g.nodes)
+    return {(s, t): (net.reachable(s, t), net.path(s, t))
+            for s in hosts for t in hosts}
+
+
+def test_cached_matches_uncached_across_transitions():
+    cached, uncached = mesh_net(), mesh_net()
+    uncached.reach_cache = False
+    transitions = [
+        lambda n: None,
+        lambda n: n.set_link_up("a", "b", False),
+        lambda n: n.set_host_up("c", False),
+        lambda n: n.set_host_up("c", True),
+        lambda n: n.set_link_up("a", "b", True),
+    ]
+    for apply in transitions:
+        apply(cached)
+        apply(uncached)
+        assert all_pairs(cached) == all_pairs(uncached)
+
+
+def test_cache_amortizes_graph_builds():
+    net = mesh_net()
+    before = net.n_graph_builds
+    for _ in range(10):
+        assert net.reachable("a", "d")
+    assert net.n_graph_builds == before + 1      # one components build
+    assert net.n_reach_queries >= 10
+    net.set_link_up("a", "b", False)             # epoch bump invalidates
+    net.reachable("a", "d")
+    assert net.n_graph_builds == before + 2
+
+
+def test_uncached_recomputes_every_query():
+    net = mesh_net()
+    net.reach_cache = False
+    before = net.n_graph_builds
+    for _ in range(5):
+        net.reachable("a", "d")
+    assert net.n_graph_builds == before + 5
+
+
+def test_sssp_cache_shares_one_build_per_source():
+    net = mesh_net()
+    before = net.n_graph_builds
+    for dst in ("b", "c", "d"):
+        assert net.path("a", dst) is not None
+    assert net.n_graph_builds == before + 1      # one Dijkstra for "a"
+    assert net.path("b", "d") is not None        # new source: one more
+    assert net.n_graph_builds == before + 2
+
+
+def test_path_is_lowest_latency_after_heal():
+    net = mesh_net()
+    assert net.path("a", "c") == ["a", "b", "c"]     # 3ms beats 5ms
+    net.set_link_up("a", "b", False)
+    assert net.path("a", "c") == ["a", "c"]
+    net.set_link_up("a", "b", True)
+    assert net.path("a", "c") == ["a", "b", "c"]

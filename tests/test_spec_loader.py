@@ -1,0 +1,85 @@
+"""GraphML + YAML loader: Table I parity for delivery/mode/brokerCfg.
+
+File-loaded specs can select the subscriber delivery mode, the broker
+coordination mode, and broker protocol tuning — not just programmatic
+ones (paper Table I; PR 2 satellite).
+"""
+import networkx as nx
+import pytest
+import yaml
+
+from repro.core import Engine, from_graphml
+
+
+def write_pipeline(tmp_path, **graph_attrs):
+    g = nx.Graph(topicCfg="topics.yaml", **graph_attrs)
+    g.add_node("h1", prodType="SFST",
+               prodCfg="{topicName: raw, lines: [x y, z], "
+                       "totalMessages: 3, interval: 0.2}")
+    g.add_node("h2", brokerCfg="{}")
+    g.add_node("h3", consType="STANDARD",
+               consCfg="{topic: raw, pollInterval: 0.05}")
+    g.add_node("s1")
+    for h in ["h1", "h2", "h3"]:
+        g.add_edge(h, "s1", lat=2.0, bw=500.0)
+    nx.write_graphml(g, tmp_path / "pipe.graphml")
+    (tmp_path / "topics.yaml").write_text(
+        yaml.dump({"topics": [{"name": "raw", "leader": "h2"}]}))
+    return str(tmp_path / "pipe.graphml")
+
+
+def test_defaults_without_graph_attrs(tmp_path):
+    spec = from_graphml(write_pipeline(tmp_path))
+    assert spec.delivery == "wakeup"
+    assert spec.mode == "zk"
+
+
+def test_graph_attrs_select_delivery_and_mode(tmp_path):
+    path = write_pipeline(tmp_path, delivery="poll", mode="kraft")
+    spec = from_graphml(path)
+    assert spec.delivery == "poll"
+    assert spec.mode == "kraft"
+
+
+def test_explicit_kwargs_override_graph_attrs(tmp_path):
+    path = write_pipeline(tmp_path, delivery="poll", mode="kraft")
+    spec = from_graphml(path, delivery="wakeup", mode="zk")
+    assert spec.delivery == "wakeup"
+    assert spec.mode == "zk"
+
+
+def test_graph_level_broker_cfg_reaches_the_cluster(tmp_path):
+    path = write_pipeline(
+        tmp_path, brokerCfg="{session_timeout: 3.0, retry_backoff: 0.25}")
+    spec = from_graphml(path)
+    (broker,) = [c for c in spec.components() if c.role == "broker"]
+    assert broker.cfg["session_timeout"] == 3.0
+    eng = Engine(spec, seed=0)
+    assert eng.cluster.cfg["session_timeout"] == 3.0
+    assert eng.cluster.cfg["retry_backoff"] == 0.25
+
+
+def test_node_broker_cfg_overrides_graph_level(tmp_path):
+    g = nx.Graph(brokerCfg="{session_timeout: 3.0, election_time: 1.0}")
+    g.add_node("h1", brokerCfg="{session_timeout: 9.0}")
+    g.add_node("h2", consType="STANDARD", consCfg="{topic: t}")
+    g.add_node("s1")
+    for h in ["h1", "h2"]:
+        g.add_edge(h, "s1", lat=1.0)
+    nx.write_graphml(g, tmp_path / "pipe.graphml")
+    spec = from_graphml(str(tmp_path / "pipe.graphml"))
+    (broker,) = [c for c in spec.components() if c.role == "broker"]
+    assert broker.cfg["session_timeout"] == 9.0    # node wins
+    assert broker.cfg["election_time"] == 1.0      # graph default kept
+
+
+def test_loaded_delivery_mode_drives_the_run(tmp_path):
+    """A poll-mode file run executes more engine events than wakeup."""
+    runs = {}
+    for delivery in ("poll", "wakeup"):
+        path = write_pipeline(tmp_path, delivery=delivery)
+        eng = Engine(from_graphml(path), seed=0)
+        m = eng.run_metrics(until=10.0)
+        assert m["records_delivered"] == 3
+        runs[delivery] = m["engine_events"]
+    assert runs["wakeup"] < runs["poll"]

@@ -1,0 +1,269 @@
+"""Sweep subsystem: grid expansion, runner, caching/resume, results.
+
+The resume contract under test: every completed scenario persists as an
+atomic per-scenario cache file keyed by a content hash of (builder,
+params), so an interrupted sweep reruns only what's missing — and the
+aggregated table of a resumed sweep equals an uninterrupted run's
+(deterministic metrics; wall clock excluded via TIMING_KEYS).
+"""
+import glob
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import Engine
+from repro.sweep import (
+    Scenario, SweepResults, SweepSpec, build_scenario, run_sweep,
+    scenario_id,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def tiny_sweep(**base_over) -> SweepSpec:
+    base = {"topology": "star", "n_brokers": 1, "n_topics": 2,
+            "n_producers": 2, "rate_kbps": 16.0, "horizon": 10.0,
+            "seed": 0}
+    base.update(base_over)
+    return SweepSpec(
+        name="tiny",
+        axes={"n_hosts": [8, 12], "delivery": ["poll", "wakeup"]},
+        base=base)
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion + content hashing
+# ---------------------------------------------------------------------------
+
+
+def test_grid_expansion_order_and_params():
+    sweep = tiny_sweep()
+    scens = sweep.scenarios()
+    assert len(sweep) == len(scens) == 4
+    assert [s.params["n_hosts"] for s in scens] == [8, 8, 12, 12]
+    assert [s.params["delivery"] for s in scens] == \
+        ["poll", "wakeup"] * 2
+    assert all(s.params["horizon"] == 10.0 for s in scens)
+
+
+def test_scenario_ids_stable_and_distinct():
+    a = tiny_sweep().scenarios()
+    b = tiny_sweep().scenarios()
+    assert [s.id for s in a] == [s.id for s in b]
+    assert len({s.id for s in a}) == 4
+    # any knob change (base or axis) changes the hash
+    c = tiny_sweep(rate_kbps=32.0).scenarios()
+    assert not {s.id for s in a} & {s.id for s in c}
+
+
+def test_derive_hook_feeds_the_hash():
+    def derive(p):
+        p["seed"] = 100 * p["n_hosts"]
+        return p
+
+    sweep = tiny_sweep()
+    sweep.derive = derive
+    scens = sweep.scenarios()
+    assert scens[0].params["seed"] == 800
+    assert scens[0].id == scenario_id(scens[0].params, build_scenario)
+
+
+# ---------------------------------------------------------------------------
+# Runner: metrics, caching, resume
+# ---------------------------------------------------------------------------
+
+
+def test_run_metrics_deterministic_except_wall():
+    params = tiny_sweep().scenarios()[1].params
+    m1 = Engine(build_scenario(params), seed=0).run_metrics(until=10.0)
+    m2 = Engine(build_scenario(params), seed=0).run_metrics(until=10.0)
+    m1.pop("wall_s"), m2.pop("wall_s")
+    assert m1 == m2
+    assert m1["records_delivered"] > 0
+    assert m1["engine_events"] > 0
+
+
+def test_inline_run_and_cache_roundtrip(tmp_path):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep()
+    a = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert len(a) == 4 and a.n_cached == 0
+    assert len(glob.glob(os.path.join(cache, "*.json"))) == 4
+    b = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert b.n_cached == 4
+    assert a.fingerprint() == b.fingerprint()
+    # wakeup delivers everything poll delivers (same simulated work)
+    cols = b.to_columns(["delivery", "records_delivered"])
+    assert cols["records_delivered"].sum() > 0
+
+
+def test_partial_sweep_shares_cache_with_full_run(tmp_path):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep()
+    ref = run_sweep(sweep, workers=1, cache_dir=None)
+    first_two = {s.id for s in sweep.scenarios()[:2]}
+    part = run_sweep(sweep, workers=1, cache_dir=cache,
+                     select=lambda s: s.id in first_two)
+    assert len(part) == 2 and part.n_cached == 0
+    full = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert full.n_cached == 2            # resumed, not recomputed
+    assert full.fingerprint() == ref.fingerprint()
+
+
+def test_corrupt_cache_entry_reruns(tmp_path):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep()
+    run_sweep(sweep, workers=1, cache_dir=cache)
+    victim = sorted(glob.glob(os.path.join(cache, "*.json")))[0]
+    with open(victim, "w") as f:
+        f.write("{not json")
+    res = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert res.n_cached == 3
+
+
+KILL_SCRIPT = """
+import sys
+sys.path.insert(0, {src!r})
+from test_sweep import tiny_sweep
+from repro.sweep import run_sweep
+
+if __name__ == "__main__":
+    run_sweep(tiny_sweep(**{base_over!r}), workers=2, cache_dir={cache!r})
+"""
+
+
+def test_killed_sweep_resumes_from_cache(tmp_path):
+    """Kill a sweep mid-grid; the rerun skips cached scenarios and the
+    aggregated table equals an uninterrupted run's."""
+    slow = dict(horizon=120.0, poll_interval=0.02)   # ~seconds/scenario
+    ref = run_sweep(tiny_sweep(**slow), workers=1, cache_dir=None)
+
+    cache = str(tmp_path / "cache")
+    script = tmp_path / "kill_sweep.py"
+    script.write_text(KILL_SCRIPT.format(
+        src=os.path.abspath(SRC), base_over=slow, cache=cache))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(SRC), os.path.dirname(__file__)]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    child = subprocess.Popen([sys.executable, str(script)], env=env,
+                             start_new_session=True)
+    try:
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            done = glob.glob(os.path.join(cache, "*.json"))
+            if done or child.poll() is not None:
+                break
+            time.sleep(0.05)
+        # SIGKILL the whole group: workers must not finish the grid
+        try:
+            os.killpg(child.pid, signal.SIGKILL)
+        except ProcessLookupError:
+            pass
+    finally:
+        child.wait()
+    n_done = len(glob.glob(os.path.join(cache, "*.json")))
+    assert n_done >= 1, "child produced no cached scenarios before kill"
+
+    resumed = run_sweep(tiny_sweep(**slow), workers=1, cache_dir=cache)
+    assert resumed.n_cached == n_done
+    assert resumed.fingerprint() == ref.fingerprint()
+    assert resumed.total("engine_events") == ref.total("engine_events")
+
+
+DET_SCRIPT = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.sweep import SweepSpec, run_sweep
+
+if __name__ == "__main__":
+    sweep = SweepSpec(
+        name="det", axes={{"n_hosts": [10]}},
+        base={{"topology": "geo_wan", "n_brokers": 3, "replication": 3,
+               "n_topics": 3, "n_producers": 3, "rate_kbps": 16.0,
+               "loss_pct": 2.0, "horizon": 10.0, "seed": 0}})
+    print(run_sweep(sweep, workers=1, cache_dir=None).fingerprint())
+"""
+
+
+def test_replicated_fingerprint_stable_across_processes(tmp_path):
+    """Replicated, lossy scenarios hash identically under different
+    PYTHONHASHSEEDs — the sweep cache mixes rows produced by different
+    worker processes, so set-iteration order must never leak into
+    results (ISR fan-out iterates replicas order; see Cluster._replicate).
+    """
+    script = tmp_path / "det.py"
+    script.write_text(DET_SCRIPT.format(src=os.path.abspath(SRC)))
+    fps = []
+    for hashseed in ("1", "97"):
+        env = {**os.environ, "PYTHONHASHSEED": hashseed}
+        out = subprocess.run([sys.executable, str(script)], env=env,
+                             capture_output=True, text=True, check=True)
+        fps.append(out.stdout.strip().splitlines()[-1])
+    assert fps[0] == fps[1]
+
+
+# ---------------------------------------------------------------------------
+# Results aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_results():
+    return run_sweep(tiny_sweep(), workers=1, cache_dir=None)
+
+
+def test_varying_params_are_the_axes(tiny_results):
+    assert tiny_results.varying_params() == ["n_hosts", "delivery"]
+
+
+def test_aggregate_groups_and_means(tiny_results):
+    agg = tiny_results.aggregate(["delivery"],
+                                 metrics=["records_delivered"])
+    assert [a["delivery"] for a in agg] == ["poll", "wakeup"]
+    assert all(a["n"] == 2 for a in agg)
+    total = sum(a["records_delivered_mean"] * a["n"] for a in agg)
+    assert total == tiny_results.total("records_delivered")
+
+
+def test_table_renders_axes_and_metrics(tiny_results):
+    txt = tiny_results.table()
+    assert "n_hosts" in txt and "delivery" in txt
+    assert "latency_p99_mean" in txt
+    assert len(txt.splitlines()) == 2 + 4    # header, rule, 4 groups
+
+
+def test_dict_valued_axis_groups_and_renders(tmp_path):
+    """Unhashable axis values (generator kwargs) group by repr."""
+    sweep = SweepSpec(
+        name="topo_axis",
+        axes={"topo": [{"fanout": 2}, {"fanout": 4}]},
+        base={"topology": "tree", "n_hosts": 8, "n_brokers": 1,
+              "n_topics": 1, "n_producers": 1, "rate_kbps": 16.0,
+              "horizon": 5.0, "seed": 0})
+    res = run_sweep(sweep, workers=1, cache_dir=str(tmp_path / "c"))
+    assert len(res) == 2
+    assert res.varying_params() == ["topo"]
+    txt = res.table()
+    assert "fanout" in txt and len(txt.splitlines()) == 4
+
+
+def test_save_load_roundtrip(tiny_results, tmp_path):
+    path = str(tmp_path / "results.json")
+    tiny_results.save_json(path)
+    loaded = SweepResults.load_json(path)
+    assert loaded.fingerprint() == tiny_results.fingerprint()
+
+
+def test_fingerprint_ignores_wall_clock(tiny_results):
+    clone = SweepResults(
+        [json.loads(json.dumps(r)) for r in tiny_results.rows],
+        name=tiny_results.name)
+    for r in clone.rows:
+        r["metrics"]["wall_s"] = 1e9
+    assert clone.fingerprint() == tiny_results.fingerprint()

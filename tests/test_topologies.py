@@ -1,0 +1,89 @@
+"""Topology generators: connectivity, link validity, determinism.
+
+The determinism half is the contract the sweep runner's content-hash
+cache relies on: a fixed (n_hosts, seed, kwargs) must reproduce the
+*identical* graph — nodes, edges and every LinkCfg attribute — across
+processes and runs.
+"""
+import networkx as nx
+import pytest
+
+from repro.core import Engine, PipelineSpec
+from repro.sweep import GENERATORS, generate, hosts_of
+
+SIZES = [1, 5, 17, 64]
+
+
+def graphs_identical(a: nx.Graph, b: nx.Graph) -> bool:
+    if set(a.nodes) != set(b.nodes) or set(map(frozenset, a.edges)) != \
+            set(map(frozenset, b.edges)):
+        return False
+    for n in a.nodes:
+        if a.nodes[n] != b.nodes[n]:
+            return False
+    for u, v in a.edges:
+        if a.edges[u, v]["cfg"] != b.edges[u, v]["cfg"]:
+            return False
+    return a.graph["hosts"] == b.graph["hosts"]
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+@pytest.mark.parametrize("n", SIZES)
+def test_connected_with_valid_links(name, n):
+    g = generate(name, n, seed=3)
+    assert nx.is_connected(g), f"{name}({n}) must be connected"
+    hosts = hosts_of(g)
+    assert len(hosts) == n
+    assert all(g.nodes[h].get("kind") == "host" for h in hosts)
+    for u, v, d in g.edges(data=True):
+        cfg = d["cfg"]
+        assert cfg.lat_ms > 0
+        assert cfg.bw_mbps > 0
+        assert 0.0 <= cfg.loss_pct < 100.0
+        assert cfg.up
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_fixed_seed_reproduces_identical_graph(name):
+    a = generate(name, 23, seed=11)
+    b = generate(name, 23, seed=11)
+    assert graphs_identical(a, b)
+
+
+def test_geo_wan_seed_changes_graph():
+    a = generate("geo_wan", 23, seed=1)
+    b = generate("geo_wan", 23, seed=2)
+    assert not graphs_identical(a, b)
+
+
+def test_geo_wan_latency_tracks_distance():
+    g = generate("geo_wan", 30, seed=5, km_per_ms=200.0)
+    pos = g.graph["pos"]
+    for u, v, d in g.edges(data=True):
+        (ax, ay), (bx, by) = pos[u], pos[v]
+        dist = ((ax - bx) ** 2 + (ay - by) ** 2) ** 0.5
+        assert d["cfg"].lat_ms == pytest.approx(
+            max(0.05, dist / 200.0))
+
+
+def test_fat_tree_autosizes_k():
+    g = generate("fat_tree", 20, seed=0)     # k=4 holds 16 -> k=6
+    assert len(hosts_of(g)) == 20
+    assert any(n.startswith("c") for n in g.nodes)
+
+
+def test_from_topology_runs_a_pipeline():
+    """A generated topology drives a real engine run end-to-end."""
+    g = generate("geo_wan", 8, seed=2)
+    spec = PipelineSpec.from_topology(g, delivery="wakeup")
+    hosts = hosts_of(g)
+    spec.add_broker(hosts[0])
+    spec.add_topic("t0", leader=hosts[0])
+    spec.add_producer(hosts[1], "SYNTHETIC", topics=["t0"],
+                      rateKbps=16.0, msgSize=256, totalMessages=10)
+    spec.add_consumer(hosts[2], "STANDARD", topic="t0", pollInterval=0.1)
+    eng = Engine(spec, seed=0)
+    m = eng.run_metrics(until=10.0)
+    assert m["records_produced"] == 10
+    assert m["records_delivered"] == 10
+    assert m["lost_or_partial"] == 0
