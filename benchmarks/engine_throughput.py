@@ -20,6 +20,14 @@ Since PR 2 the figure is a thin sweep definition: a one-axis
 serially (``workers=1``), because the two wall times are compared
 against each other and must not contend for cores.
 
+Since PR 3 a second, ``linger_ms`` axis measures the produce batcher:
+the same scenario with fast producers and a finite message budget runs
+at ``linger_ms=0`` (legacy per-record produce) and ``linger_ms>0``
+(accumulated batches), asserting the delivered record sets are
+bit-identical, and reports ``produce_event_reduction`` — flushed
+produce batches at linger 0 over batches with lingering.  The record
+and batch counts are deterministic, so CI gates on the ratio.
+
 Output contract (consumed by CI and tracked across PRs):
 ``BENCH_engine.json`` — see ``benchmarks/run.py`` for the schema.
 """
@@ -34,17 +42,19 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)               # `python benchmarks/...py` works
 
-from repro.core import PipelineSpec  # noqa: E402
+from repro.core import Engine, PipelineSpec  # noqa: E402
 from repro.sweep import SweepSpec, run_sweep  # noqa: E402
 from benchmarks.common import emit  # noqa: E402
 
 N_BROKERS = 3
 N_TOPICS = 10
 REPLICATION = 3
+LINGER_MS = 100.0           # the >0 point of the linger axis
 
 
 def build(delivery: str, *, n_hosts: int = 50,
-          poll_interval: float = 0.1, rate_kbps: float = 0.5
+          poll_interval: float = 0.1, rate_kbps: float = 0.5,
+          linger_ms: float = 0.0, total_msgs: int = 0
           ) -> PipelineSpec:
     """50 hosts: 3 brokers + 10 producers + 37 consumers on one switch."""
     spec = PipelineSpec(delivery=delivery)
@@ -62,8 +72,11 @@ def build(delivery: str, *, n_hosts: int = 50,
                        replication=min(REPLICATION, N_BROKERS))
     producers = hosts[N_BROKERS:N_BROKERS + N_TOPICS]
     for i, h in enumerate(producers):
-        spec.add_producer(h, "SYNTHETIC", topics=[topics[i]],
-                          rateKbps=rate_kbps, msgSize=512)
+        cfg = dict(topics=[topics[i]], rateKbps=rate_kbps, msgSize=512,
+                   lingerMs=linger_ms)
+        if total_msgs:
+            cfg["totalMessages"] = total_msgs
+        spec.add_producer(h, "SYNTHETIC", **cfg)
     consumers = hosts[N_BROKERS + N_TOPICS:]
     for i, h in enumerate(consumers):
         # each consumer follows two topics, round-robin
@@ -78,6 +91,47 @@ def throughput_builder(p: dict) -> PipelineSpec:
     return build(p["delivery"], n_hosts=int(p["n_hosts"]),
                  poll_interval=float(p.get("poll_interval", 0.1)),
                  rate_kbps=float(p.get("rate_kbps", 0.5)))
+
+
+def _linger_run(linger_ms: float, *, n_hosts: int, horizon: float,
+                total_msgs: int):
+    """One wakeup-mode run of the fast-producer linger scenario.
+
+    256 kbps producers emit a 512 B record every 16 ms and stop after
+    ``total_msgs``, well before ``horizon`` — so every record flushes,
+    replicates and delivers in both linger settings and the delivered
+    sets can be compared bit-for-bit.
+    """
+    spec = build("wakeup", n_hosts=n_hosts, rate_kbps=256.0,
+                 linger_ms=linger_ms, total_msgs=total_msgs)
+    eng = Engine(spec, seed=0)
+    mon = eng.run(until=horizon)
+    delivered = sorted((mid, c) for mid, m in mon.msgs.items()
+                       for c in m.deliveries)
+    return eng, delivered
+
+
+def run_linger(*, n_hosts: int, horizon: float, total_msgs: int) -> dict:
+    """The linger_ms axis: produce-event reduction at identical work."""
+    out = {}
+    delivered = {}
+    for linger_ms in (0.0, LINGER_MS):
+        eng, dl = _linger_run(linger_ms, n_hosts=n_hosts, horizon=horizon,
+                              total_msgs=total_msgs)
+        delivered[linger_ms] = dl
+        m = eng.metrics()
+        out[f"linger_{linger_ms:g}ms"] = {
+            "records_produced": m["records_produced"],
+            "records_delivered": m["records_delivered"],
+            "produce_batches": m["produce_batches"],
+            "engine_events": m["engine_events"],
+        }
+    assert delivered[0.0] == delivered[LINGER_MS], \
+        "linger batching changed the delivered record set"
+    b0 = out["linger_0ms"]["produce_batches"]
+    b1 = out[f"linger_{LINGER_MS:g}ms"]["produce_batches"]
+    out["produce_event_reduction"] = b0 / max(1, b1)
+    return out
 
 
 def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
@@ -128,6 +182,15 @@ def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
     emit("engine/speedup", 0.0,
          f"wall={results['speedup']:.1f}x;"
          f"events={results['event_reduction']:.1f}x")
+    # linger_ms axis: the produce batcher's event reduction (deterministic
+    # batch counts; CI gates on >= 4x)
+    results["linger"] = run_linger(
+        n_hosts=n_hosts, horizon=horizon,
+        total_msgs=250 if smoke else 1000)
+    results["produce_event_reduction"] = \
+        results["linger"]["produce_event_reduction"]
+    emit("engine/linger", 0.0,
+         f"produce_events={results['produce_event_reduction']:.1f}x")
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
     return results
@@ -141,4 +204,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     res = run(smoke=args.smoke, out=args.out)
     print(json.dumps({k: v for k, v in res.items()
-                      if k in ("speedup", "event_reduction")}, indent=2))
+                      if k in ("speedup", "event_reduction",
+                               "produce_event_reduction")}, indent=2))

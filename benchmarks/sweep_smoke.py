@@ -1,12 +1,18 @@
-"""CI sweep smoke: tiny 2x2 grid, 2 workers, resume + determinism gate.
+"""CI sweep smoke: tiny 2x2x2 grid, 2 workers, resume + determinism gate.
 
-Runs a 2x2 grid (topology size x delivery mode) on 2 spawn workers,
-deletes half the per-scenario cache, reruns, and asserts:
+Runs a 2x2x2 grid (topology size x delivery mode x topic partitions) on
+2 spawn workers, deletes part of the per-scenario cache, reruns, and
+asserts:
 
 - the rerun reuses the surviving cache entries (resume);
 - the resumed aggregate equals the uninterrupted run's fingerprint —
   event counts and all other deterministic metrics identical (wall
   clock is excluded from the fingerprint, as in the bench smoke).
+
+The ``partitions`` axis makes the gate cover the per-partition hash
+fields: partitioned metrics (per-partition record/byte tallies) enter
+the fingerprint, so any cross-process nondeterminism in the partitioned
+delivery path fails CI here.
 
 Exits non-zero on any gate failure; CI runs it on every PR.
 """
@@ -26,7 +32,8 @@ CACHE = ".ci_sweep"
 
 sweep = SweepSpec(
     name="ci_smoke",
-    axes={"n_hosts": [8, 12], "delivery": ["poll", "wakeup"]},
+    axes={"n_hosts": [8, 12], "delivery": ["poll", "wakeup"],
+          "partitions": [1, 2]},
     base={"topology": "star", "n_brokers": 1, "n_topics": 2,
           "n_producers": 2, "rate_kbps": 16.0, "horizon": 10.0,
           "seed": 0})
@@ -35,11 +42,11 @@ sweep = SweepSpec(
 def main() -> None:
     shutil.rmtree(CACHE, ignore_errors=True)
     a = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
-    assert len(a) == 4 and a.n_cached == 0
-    for p in sorted(glob.glob(os.path.join(CACHE, "*.json")))[:2]:
+    assert len(a) == 8 and a.n_cached == 0
+    for p in sorted(glob.glob(os.path.join(CACHE, "*.json")))[:3]:
         os.remove(p)
     b = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
-    assert b.n_cached == 2, "resume must reuse the surviving cache"
+    assert b.n_cached == 5, "resume must reuse the surviving cache"
     assert a.fingerprint() == b.fingerprint(), \
         "resumed sweep diverged from the uninterrupted run"
     events = a.total("engine_events")

@@ -7,7 +7,7 @@ divergent-log truncation that silently loses messages after a network
 partition heals ([36] in the paper).  This module implements exactly that
 protocol surface over the discrete-event engine:
 
-- **Stale metadata.** Clients (producers/consumers) cache topic→leader
+- **Stale metadata.** Clients (producers/consumers) cache partition→leader
   metadata and refresh it only through brokers they can reach; brokers keep
   a leadership *belief* that updates only when the controller can reach
   them.  A producer co-located with a partitioned leader therefore keeps
@@ -20,23 +20,56 @@ protocol surface over the discrete-event engine:
   and the messages are delivered after the heal → no loss (the paper
   "could not observe a similar behavior in Raft-based Kafka").
 
+**Partitions.**  A topic is a list of partitions; every protocol structure
+(logs, leadership, ISR, beliefs, client metadata, elections, truncation)
+is keyed per (topic, partition) with *independent* leaders spread over the
+broker list, so a network partition can orphan a subset of a topic's
+partition leaders while the rest keep serving.  Producers route records by
+``hash(key) % partitions`` (crc32, so routing is stable across processes)
+or round-robin when unkeyed; records with the same key land on the same
+partition and are therefore delivered in produce order.
+
+**Consumer groups.**  Subscribers carrying the same ``group`` split a
+topic's partitions via a deterministic *range assignor* over the sorted
+live member names; committed offsets are tracked per (group, partition) in
+the cluster, so a partition handed to another member on rebalance resumes
+exactly at the commit point (no re-delivery).  The controller rebalances a
+group when a member's host fails or recovers and wakes all parked waiters
+of the topic (``_notify``), so wakeup-mode members re-fetch under the new
+assignment instead of hanging.  Ungrouped subscribers are their own
+implicit group: they own every partition and never rebalance (the legacy
+single-consumer behavior).
+
+**Produce batching.**  Producers with ``linger_s > 0`` accumulate records
+per (producer, topic, partition) into a pending batch that is flushed when
+the linger timer fires or ``batch_bytes`` is reached (Kafka ``linger.ms``
+/ ``batch.size``).  A flushed batch runs the attempt/ack/retry state
+machine *once* — one leader append, one ack, one retry timer, one
+replication transfer per follower — instead of once per record, and is
+appended through the vectorized :meth:`RecordBatch.extend_rows`.
+``linger_s == 0`` flushes a one-record batch immediately and reproduces
+the legacy per-record event pattern exactly.
+
 Brokers are in-memory (the paper's accuracy experiments do not exercise
-disk).  Each per-(broker, topic) log is a **columnar** :class:`RecordBatch`
-— numpy columns for ``msg_id`` / ``size`` / ``produce_time`` / ``epoch``
-plus a running prefix sum of sizes, and a plain payload list.  Offsets are
-implicit (offset == row index; logs are always dense leader prefixes), so
-``fetch`` byte-capping is a ``searchsorted`` on the prefix sums, divergence
-truncation is a vectorized ``isin``, and catch-up byte accounting is O(1).
-``Record`` objects are materialized only at the delivery boundary.
+disk).  Each per-(broker, topic, partition) log is a **columnar**
+:class:`RecordBatch` — numpy columns for ``msg_id`` / ``size`` /
+``produce_time`` / ``epoch`` plus a running prefix sum of sizes, and plain
+payload/key lists.  Offsets are implicit (offset == row index; logs are
+always dense leader prefixes), so ``fetch`` byte-capping is a
+``searchsorted`` on the prefix sums, divergence truncation is a vectorized
+``isin``, and catch-up byte accounting is O(1).  ``Record`` objects are
+materialized only at the delivery boundary.
 
 Delivery modes: consumers either poll (legacy fixed-interval path) or
-register as **waiters**; the cluster wakes waiters when a topic's high
-watermark advances past their offset (and after elections / leadership
-changes, so a waiter pointed at a deposed leader re-resolves metadata).
+register as **waiters**; the cluster wakes waiters when any partition's
+high watermark advances (and after elections / leadership changes /
+group rebalances, so a waiter pointed at a deposed leader or a stale
+assignment re-resolves instead of hanging).
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -61,6 +94,11 @@ FETCH_EMPTY = "empty"
 FETCH_BLOCKED = "blocked"       # unreachable / electing / stale metadata
 
 
+def key_partition(key: Any, n_partitions: int) -> int:
+    """Stable keyed routing: crc32, not ``hash()`` (which is per-process)."""
+    return zlib.crc32(str(key).encode()) % max(1, n_partitions)
+
+
 @dataclass
 class Record:
     msg_id: int
@@ -71,17 +109,19 @@ class Record:
     producer: str
     offset: int = -1
     epoch: int = 0
+    partition: int = 0
+    key: Any = None
 
 
 class RecordBatch:
-    """Columnar append-only log: numpy columns + payload list.
+    """Columnar append-only log: numpy columns + payload/key lists.
 
     Rows are offsets (dense, monotone).  ``cum_size[i]`` holds the total
     bytes of rows ``0..i`` so byte windows never re-scan records.
     """
 
     __slots__ = ("n", "msg_id", "size", "produce_time", "epoch",
-                 "cum_size", "payloads", "producers")
+                 "cum_size", "payloads", "producers", "keys")
 
     _MIN_CAP = 64
 
@@ -94,11 +134,12 @@ class RecordBatch:
         self.cum_size = np.empty(self._MIN_CAP, np.int64)
         self.payloads: list[Any] = []
         self.producers: list[str] = []
+        self.keys: list[Any] = []
 
     # -- growth --------------------------------------------------------
 
-    def _grow(self) -> None:
-        cap = max(self._MIN_CAP, 2 * len(self.msg_id))
+    def _grow(self, min_cap: int = 0) -> None:
+        cap = max(self._MIN_CAP, 2 * len(self.msg_id), min_cap)
         for name in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
             col = getattr(self, name)
             new = np.empty(cap, col.dtype)
@@ -106,7 +147,8 @@ class RecordBatch:
             setattr(self, name, new)
 
     def append_row(self, msg_id: int, size: int, produce_time: float,
-                   epoch: int, payload: Any, producer: str) -> int:
+                   epoch: int, payload: Any, producer: str,
+                   key: Any = None) -> int:
         """Append one record; returns its offset."""
         i = self.n
         if i >= len(self.msg_id):
@@ -118,7 +160,36 @@ class RecordBatch:
         self.cum_size[i] = size + (self.cum_size[i - 1] if i else 0)
         self.payloads.append(payload)
         self.producers.append(producer)
+        self.keys.append(key)
         self.n = i + 1
+        return i
+
+    def extend_rows(self, msg_ids, sizes, produce_times, epochs,
+                    payloads: list, producers: list,
+                    keys: Optional[list] = None) -> int:
+        """Vectorized multi-row append; returns the first offset.
+
+        Column arguments are sequences of equal length ``k``; the prefix
+        sum is extended with one ``cumsum`` instead of ``k`` scalar adds
+        (the produce batcher's append path).
+        """
+        k = len(payloads)
+        if k == 0:
+            return self.n
+        i = self.n
+        if i + k > len(self.msg_id):
+            self._grow(min_cap=i + k)
+        self.msg_id[i:i + k] = msg_ids
+        self.size[i:i + k] = sizes
+        self.produce_time[i:i + k] = produce_times
+        self.epoch[i:i + k] = epochs
+        base = int(self.cum_size[i - 1]) if i else 0
+        self.cum_size[i:i + k] = base + np.cumsum(
+            np.asarray(sizes, np.int64))
+        self.payloads.extend(payloads)
+        self.producers.extend(producers)
+        self.keys.extend(keys if keys is not None else [None] * k)
+        self.n = i + k
         return i
 
     # -- O(1)/O(slice) accounting --------------------------------------
@@ -155,6 +226,7 @@ class RecordBatch:
             setattr(self, name, getattr(other, name)[:other.n].copy())
         self.payloads = list(other.payloads)
         self.producers = list(other.producers)
+        self.keys = list(other.keys)
 
     def rows_not_in(self, other: "RecordBatch") -> np.ndarray:
         """Row indices whose msg_id does not appear in ``other``."""
@@ -163,41 +235,153 @@ class RecordBatch:
 
     # -- materialization boundary ---------------------------------------
 
-    def record_at(self, i: int, topic: str) -> Record:
+    def record_at(self, i: int, topic: str, partition: int = 0) -> Record:
         return Record(int(self.msg_id[i]), topic, self.payloads[i],
                       int(self.size[i]), float(self.produce_time[i]),
-                      self.producers[i], offset=i, epoch=int(self.epoch[i]))
+                      self.producers[i], offset=i, epoch=int(self.epoch[i]),
+                      partition=partition, key=self.keys[i])
 
-    def records_slice(self, topic: str, lo: int, hi: int) -> list[Record]:
-        return [self.record_at(i, topic) for i in range(lo, min(hi, self.n))]
+    def records_slice(self, topic: str, lo: int, hi: int,
+                      partition: int = 0) -> list[Record]:
+        return [self.record_at(i, topic, partition)
+                for i in range(lo, min(hi, self.n))]
 
 
 @dataclass
-class TopicMeta:
-    name: str
+class PartitionMeta:
+    """Leadership/ISR state of one (topic, partition)."""
+
+    topic: str
+    partition: int
     replicas: list[str]                  # broker hosts, preferred first
     leader: str
     isr: set[str]
     epoch: int = 0
-    electing_until: float = -1.0         # topic unavailable during election
+    electing_until: float = -1.0         # partition unavailable electing
     leader_lost_since: Optional[float] = None
     isr_since: dict = field(default_factory=dict)   # broker -> join time
 
 
+class TopicMeta:
+    """A partitioned topic: ordered :class:`PartitionMeta` list.
+
+    Attribute proxies (``leader``/``replicas``/``isr``/``epoch``/
+    ``electing_until``) forward to partition 0, preserving the
+    pre-partition single-log surface that tests and tooling built on
+    ``cluster.topics[t].leader`` still rely on.
+    """
+
+    def __init__(self, name: str, parts: list[PartitionMeta]) -> None:
+        self.name = name
+        self.parts = parts
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.parts)
+
+    # single-partition compat shims (field moved to PartitionMeta)
+    @property
+    def leader(self) -> str:
+        return self.parts[0].leader
+
+    @property
+    def replicas(self) -> list[str]:
+        return self.parts[0].replicas
+
+    @property
+    def isr(self) -> set[str]:
+        return self.parts[0].isr
+
+    @property
+    def epoch(self) -> int:
+        return self.parts[0].epoch
+
+    @property
+    def electing_until(self) -> float:
+        return self.parts[0].electing_until
+
+
 @dataclass
-class _PendingProduce:
-    record: Record
+class GroupState:
+    """Membership + current partition assignment of one (group, topic)."""
+
+    group: str
+    topic: str
+    explicit: bool                      # False: implicit solo group
+    members: list = field(default_factory=list)     # runtimes, join order
+    live: tuple = ()
+    assignment: Optional[dict[str, list[int]]] = None
+    generation: int = 0
+
+
+@dataclass
+class _PendingBatch:
+    """One in-flight produce batch (single (topic, partition) target)."""
+
+    batch_id: int
+    records: list[Record]
     producer_host: str
     first_attempt: float
     acked: bool = False
     retry_handle: Any = None             # cancellable EventHandle
 
+    @property
+    def topic(self) -> str:
+        return self.records[0].topic
+
+    @property
+    def partition(self) -> int:
+        return self.records[0].partition
+
+    @property
+    def producer(self) -> str:
+        return self.records[0].producer
+
+    @property
+    def nbytes(self) -> int:
+        return sum(r.size for r in self.records)
+
+
+@dataclass
+class _Accum:
+    """Per-(producer, topic, partition) linger accumulator."""
+
+    producer_host: str
+    records: list[Record] = field(default_factory=list)
+    nbytes: int = 0
+    flush_handle: Any = None
+
+
+class _LogMap(dict):
+    """Per-broker log map keyed by (topic, partition).
+
+    Compat shim: a bare topic string indexes partition 0, so pre-partition
+    callers (``cluster.logs[b]["t"]``) keep working.
+    """
+
+    @staticmethod
+    def _key(k):
+        return (k, 0) if isinstance(k, str) else k
+
+    def __getitem__(self, k):
+        return dict.__getitem__(self, self._key(k))
+
+    def __setitem__(self, k, v):
+        dict.__setitem__(self, self._key(k), v)
+
+    def __contains__(self, k):
+        return dict.__contains__(self, self._key(k))
+
+    def get(self, k, default=None):
+        return dict.get(self, self._key(k), default)
+
 
 class ReplicaLog:
-    """One broker's copy of one topic's log (columnar)."""
+    """One broker's copy of one (topic, partition) log (columnar)."""
 
-    def __init__(self, topic: str = "") -> None:
+    def __init__(self, topic: str = "", partition: int = 0) -> None:
         self.topic = topic
+        self.partition = partition
         self.batch = RecordBatch()
         self.hw: int = 0                 # high watermark (committed offsets)
 
@@ -208,17 +392,34 @@ class ReplicaLog:
     @property
     def records(self) -> list[Record]:
         """Materialized view (tests / debugging; not on the hot path)."""
-        return self.batch.records_slice(self.topic, 0, self.batch.n)
+        return self.batch.records_slice(self.topic, 0, self.batch.n,
+                                        self.partition)
 
     def append(self, rec: Record) -> Record:
         off = self.batch.append_row(rec.msg_id, rec.size, rec.produce_time,
-                                    rec.epoch, rec.payload, rec.producer)
+                                    rec.epoch, rec.payload, rec.producer,
+                                    rec.key)
         return dataclasses.replace(rec, offset=off)
+
+    def append_batch(self, records: list[Record],
+                     epoch: Optional[int] = None) -> list[Record]:
+        """Vectorized append; returns offset-stamped (epoch-stamped) copies."""
+        k = len(records)
+        epochs = ([epoch] * k if epoch is not None
+                  else [r.epoch for r in records])
+        first = self.batch.extend_rows(
+            [r.msg_id for r in records], [r.size for r in records],
+            [r.produce_time for r in records], epochs,
+            [r.payload for r in records], [r.producer for r in records],
+            [r.key for r in records])
+        return [dataclasses.replace(r, offset=first + j, epoch=epochs[j])
+                for j, r in enumerate(records)]
 
     def truncate_to(self, other: "ReplicaLog") -> list[Record]:
         """Make this log a copy of ``other``; return locally-lost records."""
         lost_rows = self.batch.rows_not_in(other.batch)
-        lost = [self.batch.record_at(int(i), self.topic) for i in lost_rows]
+        lost = [self.batch.record_at(int(i), self.topic, self.partition)
+                for i in lost_rows]
         self.batch.copy_from(other.batch)
         self.hw = other.hw
         return lost
@@ -235,28 +436,45 @@ class Cluster:
                                    if k in DEFAULTS}}
         self.broker_hosts = list(broker_hosts)
         self.controller_host = self.broker_hosts[0] if broker_hosts else None
-        # logs[broker][topic] -> ReplicaLog
-        self.logs: dict[str, dict[str, ReplicaLog]] = {
-            b: {} for b in broker_hosts}
+        # logs[broker][(topic, partition)] -> ReplicaLog
+        self.logs: dict[str, _LogMap] = {b: _LogMap() for b in broker_hosts}
         self.topics: dict[str, TopicMeta] = {}
         self.subs: dict[str, list] = {}          # topic -> consumer comps
-        self._consumer_offsets: dict[tuple[str, str], int] = {}
+        # (group, topic) -> GroupState; ungrouped = implicit solo group
+        self.groups: dict[tuple[str, str], GroupState] = {}
+        # committed offsets per (topic, partition, group)
+        self._consumer_offsets: dict[tuple[str, int, str], int] = {}
         # fetch responses ride one ordered connection per subscription:
         # (topic, consumer) -> sim time the last in-flight response lands
         self._inflight_until: dict[tuple[str, str], float] = {}
-        self._pending: dict[int, _PendingProduce] = {}
+        self._pending: dict[int, _PendingBatch] = {}
+        # (producer, topic, partition) -> open linger accumulator
+        self._accum: dict[tuple[str, str, int], _Accum] = {}
+        # idempotent-producer sequencing: per (producer, topic,
+        # partition) FIFO of pending batch ids; only the head is ever in
+        # flight, so retried batches cannot leapfrog each other and
+        # reorder a partition log after a leader failover (Kafka with
+        # enable.idempotence, the >=3.0 default).  Fault-free runs never
+        # queue more than one batch — the ack lands before the next
+        # flush — so the legacy event stream is unchanged.
+        self._seq_q: dict[tuple[str, str, int], list[int]] = {}
+        self._rr: dict[tuple[str, str], int] = {}   # round-robin counters
         self._msg_seq = 0
-        # client metadata cache: (client_name, topic) -> believed leader
-        self._client_meta: dict[tuple[str, str], str] = {}
-        # broker leadership belief: (broker, topic) -> (is_leader, epoch)
-        self._belief: dict[tuple[str, str], tuple[bool, int]] = {}
+        self._batch_seq = 0
+        self.n_produce_batches = 0      # flushed batches (produce requests)
+        # client metadata: (client, topic, partition) -> believed leader
+        self._client_meta: dict[tuple[str, str, int], str] = {}
+        # broker belief: (broker, topic, partition) -> (is_leader, epoch)
+        self._belief: dict[tuple[str, str, int], tuple[bool, int]] = {}
         # wakeup delivery: topic -> {consumer_name: consumer runtime}
         self._waiters: dict[str, dict[str, Any]] = {}
 
-    def _log(self, broker: str, topic: str) -> ReplicaLog:
-        rl = self.logs[broker].get(topic)
+    def _log(self, broker: str, topic: str, partition: int = 0
+             ) -> ReplicaLog:
+        key = (topic, partition)
+        rl = self.logs[broker].get(key)
         if rl is None:
-            rl = self.logs[broker][topic] = ReplicaLog(topic)
+            rl = self.logs[broker][key] = ReplicaLog(topic, partition)
         return rl
 
     # ------------------------------------------------------------------
@@ -264,33 +482,108 @@ class Cluster:
     # ------------------------------------------------------------------
 
     def create_topic(self, name: str, leader: Optional[str] = None,
-                     replication: int = 1) -> None:
+                     replication: int = 1, partitions: int = 1) -> None:
         assert self.broker_hosts, "no brokers in the pipeline"
-        leader = leader or self.broker_hosts[
-            len(self.topics) % len(self.broker_hosts)]
-        others = [b for b in self.broker_hosts if b != leader]
-        replicas = [leader] + others[:max(0, replication - 1)]
-        self.topics[name] = TopicMeta(
-            name, replicas, leader, isr=set(replicas))
-        for b in self.broker_hosts:
-            self._belief[(b, name)] = (b == leader, 0)
-        for b in replicas:
-            self.logs[b][name] = ReplicaLog(name)
+        nb = len(self.broker_hosts)
+        i0 = (self.broker_hosts.index(leader) if leader is not None
+              else len(self.topics) % nb)
+        parts = []
+        for p in range(max(1, partitions)):
+            # independent leaders, rotated over the broker list so one
+            # broker failure orphans only a subset of the partitions
+            lead = self.broker_hosts[(i0 + p) % nb]
+            others = [b for b in self.broker_hosts if b != lead]
+            replicas = [lead] + others[:max(0, replication - 1)]
+            parts.append(PartitionMeta(name, p, replicas, lead,
+                                       isr=set(replicas)))
+            for b in self.broker_hosts:
+                self._belief[(b, name, p)] = (b == lead, 0)
+            for b in replicas:
+                self.logs[b][(name, p)] = ReplicaLog(name, p)
+        self.topics[name] = TopicMeta(name, parts)
 
-    def subscribe(self, consumer, topic: str) -> None:
+    def subscribe(self, consumer, topic: str,
+                  group: Optional[str] = None) -> None:
         self.subs.setdefault(topic, []).append(consumer)
-        self._consumer_offsets[(topic, consumer.name)] = 0
+        group = group or getattr(consumer, "group", None)
+        explicit = group is not None
+        gname = group or consumer.name
+        meta = self.topics[topic]
+        for p in range(meta.n_partitions):
+            self._consumer_offsets.setdefault((topic, p, gname), 0)
+        gs = self.groups.get((gname, topic))
+        if gs is None:
+            gs = self.groups[(gname, topic)] = GroupState(
+                gname, topic, explicit)
+        gs.members.append(consumer)
 
     def start(self) -> None:
         self.engine.schedule(self.cfg["controller_tick"],
                              self._controller_tick)
 
     # ------------------------------------------------------------------
+    # Consumer groups (range assignor + failure-driven rebalance)
+    # ------------------------------------------------------------------
+
+    def group_of(self, consumer) -> str:
+        return getattr(consumer, "group", None) or consumer.name
+
+    def assigned_partitions(self, consumer, topic: str) -> list[int]:
+        """Partitions this subscriber currently owns (deterministic)."""
+        meta = self.topics.get(topic)
+        if meta is None:
+            return []
+        gs = self.groups.get((self.group_of(consumer), topic))
+        if gs is None or not gs.explicit:
+            # implicit solo group: owns everything, never rebalances
+            return list(range(meta.n_partitions))
+        if gs.assignment is None:
+            self._assign(gs)
+        return gs.assignment.get(consumer.name, [])
+
+    def _assign(self, gs: GroupState,
+                live: Optional[tuple] = None) -> None:
+        """Range assignor: contiguous partition ranges over sorted live
+        member names — deterministic for a fixed membership."""
+        if live is None:
+            net = self.engine.net
+            live = tuple(sorted(m.name for m in gs.members
+                                if net.host_up(m.host)))
+        n_parts = self.topics[gs.topic].n_partitions
+        gs.live = live
+        gs.generation += 1
+        gs.assignment = {}
+        m = len(live)
+        for i, name in enumerate(live):
+            gs.assignment[name] = list(range(i * n_parts // m,
+                                             (i + 1) * n_parts // m))
+
+    def _rebalance_groups(self, now: float) -> None:
+        """Reassign any explicit group whose live membership changed."""
+        net = self.engine.net
+        for (gname, topic), gs in self.groups.items():
+            if not gs.explicit or gs.assignment is None:
+                continue
+            live = tuple(sorted(m.name for m in gs.members
+                                if net.host_up(m.host)))
+            if live != gs.live:
+                self._assign(gs, live)
+                self.engine.monitor.event(
+                    now, "group_rebalance", group=gname, topic=topic,
+                    members=list(live), generation=gs.generation)
+                # waiters parked under the stale assignment must re-fetch
+                self._notify(topic)
+
+    def committed_offset(self, topic: str, partition: int,
+                         group: str) -> int:
+        return self._consumer_offsets.get((topic, partition, group), 0)
+
+    # ------------------------------------------------------------------
     # Wakeup delivery (event-driven subscribers)
     # ------------------------------------------------------------------
 
     def wait_for_data(self, consumer, topic: str) -> None:
-        """Park a subscriber until the topic's high watermark advances."""
+        """Park a subscriber until one of the topic's HWs advances."""
         self._waiters.setdefault(topic, {})[consumer.name] = consumer
 
     def _notify(self, topic: str) -> None:
@@ -309,138 +602,217 @@ class Cluster:
     # ------------------------------------------------------------------
 
     def _client_leader(self, client_host: str, client_name: str,
-                       topic: str) -> Optional[str]:
-        key = (client_name, topic)
+                       topic: str, partition: int) -> Optional[str]:
+        key = (client_name, topic, partition)
         cached = self._client_meta.get(key)
         if cached is not None:
             return cached
         net = self.engine.net
         for b in self.broker_hosts:       # metadata request to any broker
             if net.host_up(b) and net.reachable(client_host, b):
-                leader = self.topics[topic].leader
+                leader = self.topics[topic].parts[partition].leader
                 self._client_meta[key] = leader
                 return leader
         return None
 
-    def _invalidate_client(self, client_name: str, topic: str) -> None:
-        self._client_meta.pop((client_name, topic), None)
+    def _invalidate_client(self, client_name: str, topic: str,
+                           partition: int) -> None:
+        self._client_meta.pop((client_name, topic, partition), None)
 
     # ------------------------------------------------------------------
-    # Produce path
+    # Produce path (keyed routing + linger batching)
     # ------------------------------------------------------------------
 
     def next_msg_id(self) -> int:
         self._msg_seq += 1
         return self._msg_seq
 
+    def _route(self, producer_name: str, topic: str, key: Any) -> int:
+        n_parts = self.topics[topic].n_partitions
+        if n_parts <= 1:
+            return 0
+        if key is not None:
+            return key_partition(key, n_parts)
+        rr_key = (producer_name, topic)
+        i = self._rr.get(rr_key, 0)
+        self._rr[rr_key] = i + 1
+        return i % n_parts
+
     def produce(self, producer_host: str, producer_name: str, topic: str,
-                payload: Any, size: int) -> int:
-        """Producer API.  Returns msg_id; delivery is asynchronous."""
+                payload: Any, size: int, *, key: Any = None,
+                linger_s: float = 0.0, batch_bytes: int = 1 << 14) -> int:
+        """Producer API.  Returns msg_id; delivery is asynchronous.
+
+        ``key`` selects the partition (``crc32(key) % partitions``;
+        round-robin when ``None``).  ``linger_s > 0`` accumulates records
+        per (producer, topic, partition) and flushes the batch on the
+        linger timeout or when ``batch_bytes`` is reached; ``linger_s ==
+        0`` flushes a single-record batch immediately (legacy behavior).
+        """
         now = self.engine.now
+        part = self._route(producer_name, topic, key)
         rec = Record(self.next_msg_id(), topic, payload, size, now,
-                     producer_name)
+                     producer_name, partition=part, key=key)
         self.engine.monitor.produced(rec)
-        self._pending[rec.msg_id] = _PendingProduce(rec, producer_host, now)
-        self._attempt_produce(rec.msg_id)
+        if linger_s <= 0.0:
+            self._start_batch([rec], producer_host)
+            return rec.msg_id
+        akey = (producer_name, topic, part)
+        acc = self._accum.get(akey)
+        if acc is None:
+            acc = self._accum[akey] = _Accum(producer_host)
+        acc.records.append(rec)
+        acc.nbytes += size
+        if acc.nbytes >= batch_bytes:
+            self._flush_accum(akey)
+        elif acc.flush_handle is None:
+            acc.flush_handle = self.engine.schedule(
+                linger_s, lambda: self._flush_accum(akey))
         return rec.msg_id
 
-    def _retry_later(self, msg_id: int) -> None:
+    def _flush_accum(self, akey: tuple) -> None:
+        acc = self._accum.pop(akey, None)
+        if acc is None or not acc.records:
+            return
+        if acc.flush_handle is not None:
+            acc.flush_handle.cancel()
+            acc.flush_handle = None
+        self._start_batch(acc.records, acc.producer_host)
+
+    def _start_batch(self, records: list[Record],
+                     producer_host: str) -> None:
+        self._batch_seq += 1
+        self.n_produce_batches += 1
+        bid = self._batch_seq
+        # the delivery.timeout budget starts when the first record was
+        # produced (Kafka counts linger time), not at flush — identical
+        # for linger 0, where flush time == produce time
+        pend = _PendingBatch(bid, records, producer_host,
+                             records[0].produce_time)
+        self._pending[bid] = pend
+        q = self._seq_q.setdefault(self._seq_key(pend), [])
+        q.append(bid)
+        if len(q) == 1:                 # head: send now; else wait in FIFO
+            self._attempt_produce(bid)
+
+    @staticmethod
+    def _seq_key(pend: _PendingBatch) -> tuple[str, str, int]:
+        return (pend.producer, pend.topic, pend.partition)
+
+    def _finish_batch(self, pend: _PendingBatch) -> None:
+        """Batch left the pending set (acked or expired): send the next
+        queued batch of its (producer, topic, partition), preserving
+        produce order."""
+        q = self._seq_q.get(self._seq_key(pend))
+        if q and q[0] == pend.batch_id:
+            q.pop(0)
+            if q:
+                self._attempt_produce(q[0])
+
+    def _retry_later(self, bid: int) -> None:
         h = self.engine.schedule(
             self.cfg["retry_backoff"] + self.cfg["request_timeout"],
-            lambda: self._attempt_produce(msg_id))
-        pend = self._pending.get(msg_id)
+            lambda: self._attempt_produce(bid))
+        pend = self._pending.get(bid)
         if pend is not None:
             pend.retry_handle = h
 
-    def _attempt_produce(self, msg_id: int) -> None:
+    def _attempt_produce(self, bid: int) -> None:
         eng = self.engine
         now = eng.now
-        pend = self._pending.get(msg_id)
+        pend = self._pending.get(bid)
         if pend is None or pend.acked:
             return
         pend.retry_handle = None
-        rec = pend.record
+        topic, part = pend.topic, pend.partition
+        q = self._seq_q.get(self._seq_key(pend))
+        if q and q[0] != bid:
+            return          # not the head: resent when the head finishes
         if now - pend.first_attempt > self.cfg["delivery_timeout"]:
-            eng.monitor.expired(rec, now)       # producer gives up
-            del self._pending[msg_id]
+            for rec in pend.records:
+                eng.monitor.expired(rec, now)   # producer gives up
+            del self._pending[bid]
+            self._finish_batch(pend)
             return
-        leader = self._client_leader(pend.producer_host, rec.producer,
-                                     rec.topic)
+        leader = self._client_leader(pend.producer_host, pend.producer,
+                                     topic, part)
         if leader is None:
-            self._retry_later(msg_id)
+            self._retry_later(bid)
             return
-        meta = self.topics[rec.topic]
-        if now < meta.electing_until and leader == meta.leader:
-            self._retry_later(msg_id)
+        pm = self.topics[topic].parts[part]
+        if now < pm.electing_until and leader == pm.leader:
+            self._retry_later(bid)
             return
-        delay, lost = eng.net.transfer(pend.producer_host, leader, rec.size,
-                                       eng.client_rng(rec.producer))
+        delay, lost = eng.net.transfer(pend.producer_host, leader,
+                                       pend.nbytes,
+                                       eng.client_rng(pend.producer))
         if delay is None or lost:
             # cached leader unreachable: drop the cache so the next attempt
             # refreshes metadata through any reachable broker.
-            self._invalidate_client(rec.producer, rec.topic)
-            self._retry_later(msg_id)
+            self._invalidate_client(pend.producer, topic, part)
+            self._retry_later(bid)
             return
-        eng.schedule(delay, lambda: self._broker_append(leader, msg_id))
+        eng.schedule(delay, lambda: self._broker_append(leader, bid))
 
-    def _broker_append(self, broker: str, msg_id: int) -> None:
+    def _broker_append(self, broker: str, bid: int) -> None:
         eng = self.engine
-        pend = self._pending.get(msg_id)
+        pend = self._pending.get(bid)
         if pend is None or pend.acked:
             return
-        rec = pend.record
-        meta = self.topics[rec.topic]
-        believes, bepoch = self._belief[(broker, rec.topic)]
+        topic, part = pend.topic, pend.partition
+        pm = self.topics[topic].parts[part]
+        believes, bepoch = self._belief[(broker, topic, part)]
         if not believes:
             # NOT_LEADER response: refresh metadata and retry
-            self._invalidate_client(rec.producer, rec.topic)
+            self._invalidate_client(pend.producer, topic, part)
             pend.retry_handle = eng.schedule(
                 self.cfg["retry_backoff"],
-                lambda: self._attempt_produce(msg_id))
+                lambda: self._attempt_produce(bid))
             return
-        if self.mode == "kraft" and not self._quorum_reachable(broker, meta):
+        if self.mode == "kraft" and not self._quorum_reachable(broker, pm):
             # Raft: a leader that cannot reach a quorum refuses the write.
-            self._retry_later(msg_id)
+            self._retry_later(bid)
             return
-        log = self._log(broker, rec.topic)
-        rec = log.append(dataclasses.replace(rec, epoch=bepoch))
-        eng.monitor.broker_rx(broker, rec.size)
+        log = self._log(broker, topic, part)
+        appended = log.append_batch(pend.records, epoch=bepoch)
+        nbytes = pend.nbytes
+        eng.monitor.broker_rx(broker, nbytes)
         # Kafka default acks=1: ack once the (believed) leader has the
-        # record.  Consumer visibility waits for the high watermark; an
+        # batch.  Consumer visibility waits for the high watermark; an
         # isolated stale leader acks writes that never commit cluster-wide
         # — those are the Fig. 6b losses after truncation.
-        self._ack(rec)
-        self._maybe_commit(rec.topic)     # single-replica ISR commits here
-        self._replicate(broker, rec)
+        self._ack(bid, appended)
+        self._maybe_commit(topic, part)   # single-replica ISR commits here
+        self._replicate(broker, pm, appended, nbytes)
 
-    def _replicate(self, broker: str, rec: Record) -> None:
+    def _replicate(self, broker: str, pm: PartitionMeta,
+                   records: list[Record], nbytes: int) -> None:
         eng = self.engine
-        meta = self.topics[rec.topic]
         rep_rng = eng.client_rng("cluster:replication")
+        first_off = records[0].offset
         # iterate in replicas order, not set order: the shared rep_rng
         # stream makes follower order part of the deterministic contract
         # (ISR is always a subset of replicas), and set order varies with
         # per-process hash randomization — sweep caching would diverge.
-        for b in [x for x in meta.replicas if x in meta.isr
-                  and x != broker]:
-            delay, lost = eng.net.transfer(broker, b, rec.size, rep_rng)
+        for b in [x for x in pm.replicas if x in pm.isr and x != broker]:
+            delay, lost = eng.net.transfer(broker, b, nbytes, rep_rng)
             if delay is None or lost:
                 continue   # follower unreachable; controller manages ISR
-            eng.monitor.broker_tx(broker, rec.size)
+            eng.monitor.broker_tx(broker, nbytes)
 
-            def _deliver(b=b, rec=rec):
-                rl = self._log(b, rec.topic)
-                if rl.leo == rec.offset:       # in-order replication only
-                    rl.append(rec)
-                    eng.monitor.broker_rx(b, rec.size)
-                    self._maybe_commit(rec.topic)
+            def _deliver(b=b):
+                rl = self._log(b, pm.topic, pm.partition)
+                if rl.leo == first_off:       # in-order replication only
+                    rl.append_batch(records)
+                    eng.monitor.broker_rx(b, nbytes)
+                    self._maybe_commit(pm.topic, pm.partition)
 
             eng.schedule(delay, _deliver)
 
-    def _maybe_commit(self, topic: str) -> None:
-        """Advance HW to min(LEO) over the current ISR; wake waiters."""
-        meta = self.topics[topic]
-        logs = [self.logs[b].get(topic) for b in meta.isr]
+    def _maybe_commit(self, topic: str, partition: int = 0) -> None:
+        """Advance HW to min(LEO) over the partition's ISR; wake waiters."""
+        pm = self.topics[topic].parts[partition]
+        logs = [self.logs[b].get((topic, partition)) for b in pm.isr]
         if any(l is None for l in logs):
             return
         hw = min(l.leo for l in logs)
@@ -453,51 +825,76 @@ class Cluster:
         if advanced:
             self._notify(topic)
 
-    def _ack(self, rec: Record) -> None:
-        pend = self._pending.pop(rec.msg_id, None)
+    def _ack(self, bid: int, appended: list[Record]) -> None:
+        pend = self._pending.pop(bid, None)
         if pend is not None:
             pend.acked = True
             if pend.retry_handle is not None:
                 pend.retry_handle.cancel()      # lazy heap deletion
                 pend.retry_handle = None
-        self.engine.monitor.committed(rec, self.engine.now)
+            self._finish_batch(pend)
+        now = self.engine.now
+        for rec in appended:
+            self.engine.monitor.committed(rec, now)
 
-    def _quorum_reachable(self, broker: str, meta: TopicMeta) -> bool:
+    def _quorum_reachable(self, broker: str, pm: PartitionMeta) -> bool:
         net = self.engine.net
-        live = sum(1 for b in meta.replicas if net.reachable(broker, b))
-        return live > len(meta.replicas) // 2
+        live = sum(1 for b in pm.replicas if net.reachable(broker, b))
+        return live > len(pm.replicas) // 2
 
     # ------------------------------------------------------------------
     # Fetch path (consumers poll, or are woken by _notify)
     # ------------------------------------------------------------------
 
     def fetch(self, consumer, topic: str) -> str:
-        """Deliver committed records past the consumer's offset.
+        """Deliver committed records past the group's offsets on every
+        partition this subscriber owns.
 
-        Returns a FETCH_* status so the wakeup delivery loop can decide
-        whether to re-fetch, park as a waiter, or back off and retry.
+        Returns a combined FETCH_* status so the wakeup delivery loop can
+        decide whether to re-fetch, park as a waiter, or back off:
+        any partition byte-capped → ``delivered_more``; else any blocked
+        → ``blocked`` (interval retries under faults); else park.
         """
         eng = self.engine
-        meta = self.topics[topic]
-        chost = consumer.host
         rng = eng.client_rng(consumer.name)
-        leader = self._client_leader(chost, consumer.name, topic)
+        any_more = any_blocked = any_delivered = False
+        for p in self.assigned_partitions(consumer, topic):
+            st = self._fetch_partition(consumer, topic, p, rng)
+            if st == FETCH_DELIVERED_MORE:
+                any_more = True
+            elif st == FETCH_BLOCKED:
+                any_blocked = True
+            elif st == FETCH_DELIVERED:
+                any_delivered = True
+        if any_more:
+            return FETCH_DELIVERED_MORE
+        if any_blocked:
+            return FETCH_BLOCKED
+        return FETCH_DELIVERED if any_delivered else FETCH_EMPTY
+
+    def _fetch_partition(self, consumer, topic: str, part: int,
+                         rng) -> str:
+        eng = self.engine
+        pm = self.topics[topic].parts[part]
+        chost = consumer.host
+        leader = self._client_leader(chost, consumer.name, topic, part)
         if leader is None:
             return FETCH_BLOCKED
-        if eng.now < meta.electing_until and leader == meta.leader:
+        if eng.now < pm.electing_until and leader == pm.leader:
             return FETCH_BLOCKED
         rtt, lost = eng.net.transfer(chost, leader, 64, rng)
         if rtt is None or lost:
-            self._invalidate_client(consumer.name, topic)
+            self._invalidate_client(consumer.name, topic, part)
             return FETCH_BLOCKED
-        if not self._belief[(leader, topic)][0]:
-            self._invalidate_client(consumer.name, topic)   # NOT_LEADER
+        if not self._belief[(leader, topic, part)][0]:
+            self._invalidate_client(consumer.name, topic, part)  # NOT_LEADER
             return FETCH_BLOCKED
-        key = (topic, consumer.name)
-        log = self.logs[leader].get(topic)
+        owner = self.group_of(consumer)
+        okey = (topic, part, owner)
+        log = self.logs[leader].get((topic, part))
         if log is None:
             return FETCH_EMPTY
-        off = self._consumer_offsets[key]
+        off = self._consumer_offsets[okey]
         if off >= log.hw:
             return FETCH_EMPTY
         # fetch.max.bytes: cap one response (remainder on the next fetch)
@@ -506,9 +903,9 @@ class Cluster:
         delay, lost = eng.net.transfer(leader, chost, nbytes, rng)
         if delay is None or lost:
             return FETCH_BLOCKED
-        self._consumer_offsets[key] = off + n
+        self._consumer_offsets[okey] = off + n
         eng.monitor.broker_tx(leader, nbytes)
-        batch = log.batch.records_slice(topic, off, off + n)
+        batch = log.batch.records_slice(topic, off, off + n, part)
 
         def _deliver():
             for r in batch:
@@ -517,7 +914,9 @@ class Cluster:
 
         # TCP-ordered responses: a small later response must not overtake
         # a big in-flight one, or the consumer would see offsets out of
-        # order (ties keep FIFO order via the heap sequence number).
+        # order (ties keep FIFO order via the heap sequence number).  All
+        # partitions of a subscription multiplex over the one connection.
+        key = (topic, consumer.name)
         t_land = max(eng.now + rtt + delay,
                      self._inflight_until.get(key, 0.0))
         self._inflight_until[key] = t_land
@@ -541,10 +940,12 @@ class Cluster:
                     ctrl = self.controller_host = b
                     break
         for meta in self.topics.values():
-            self._sync_beliefs(meta, ctrl)
-            self._check_leader(meta, ctrl, now)
-            self._manage_isr(meta, ctrl, now)
-            self._preferred_rebalance(meta, ctrl, now)
+            for pm in meta.parts:
+                self._sync_beliefs(pm, ctrl)
+                self._check_leader(pm, ctrl, now)
+                self._manage_isr(pm, ctrl, now)
+                self._preferred_rebalance(pm, ctrl, now)
+        self._rebalance_groups(now)
         eng.schedule(self.cfg["controller_tick"], self._controller_tick)
 
     def _ctrl_has_majority(self, host: str) -> bool:
@@ -552,127 +953,134 @@ class Cluster:
         n = sum(1 for b in self.broker_hosts if net.reachable(host, b))
         return n > len(self.broker_hosts) // 2
 
-    def _sync_beliefs(self, meta: TopicMeta, ctrl: Optional[str]) -> None:
+    def _sync_beliefs(self, pm: PartitionMeta,
+                      ctrl: Optional[str]) -> None:
         """Brokers reachable from the controller learn the current epoch."""
         if ctrl is None:
             return
         net = self.engine.net
         for b in self.broker_hosts:
             if net.reachable(ctrl, b):
-                was_leader, _ = self._belief[(b, meta.name)]
-                is_leader = b == meta.leader
-                self._belief[(b, meta.name)] = (is_leader, meta.epoch)
+                was_leader, _ = self._belief[(b, pm.topic, pm.partition)]
+                is_leader = b == pm.leader
+                self._belief[(b, pm.topic, pm.partition)] = (is_leader,
+                                                             pm.epoch)
                 if was_leader and not is_leader:
                     # deposed leader rejoins: truncate divergence
-                    self._catch_up(b, meta)
+                    self._catch_up(b, pm)
 
-    def _check_leader(self, meta: TopicMeta, ctrl: Optional[str],
+    def _check_leader(self, pm: PartitionMeta, ctrl: Optional[str],
                       now: float) -> None:
         if ctrl is None:
             return
         net = self.engine.net
-        if net.reachable(ctrl, meta.leader) and net.host_up(meta.leader):
-            meta.leader_lost_since = None
+        if net.reachable(ctrl, pm.leader) and net.host_up(pm.leader):
+            pm.leader_lost_since = None
             return
-        if meta.leader_lost_since is None:
-            meta.leader_lost_since = now
+        if pm.leader_lost_since is None:
+            pm.leader_lost_since = now
             return
         grace = (self.cfg["session_timeout"] if self.mode == "zk"
                  else self.cfg["session_timeout"] / 2)
-        if now - meta.leader_lost_since < grace or now < meta.electing_until:
+        if now - pm.leader_lost_since < grace or now < pm.electing_until:
             return
         # elect: prefer reachable ISR members; zk may fall back unclean
-        cands = [b for b in meta.replicas
-                 if b != meta.leader and net.reachable(ctrl, b)]
-        isr_cands = [b for b in cands if b in meta.isr]
+        cands = [b for b in pm.replicas
+                 if b != pm.leader and net.reachable(ctrl, b)]
+        isr_cands = [b for b in cands if b in pm.isr]
         pick = (isr_cands or (cands if self.mode == "zk" else []))
         if not pick:
             return
         new_leader = pick[0]
-        old = meta.leader
-        meta.leader = new_leader
-        meta.epoch += 1
-        meta.isr = {b for b in meta.replicas
-                    if net.reachable(new_leader, b)}
-        meta.isr.add(new_leader)
-        meta.isr.discard(old)
-        meta.electing_until = now + self.cfg["election_time"]
-        meta.leader_lost_since = None
-        self._belief[(new_leader, meta.name)] = (True, meta.epoch)
-        self.engine.monitor.event(now, "leader_elected", topic=meta.name,
-                                  old=old, new=new_leader, epoch=meta.epoch)
+        old = pm.leader
+        pm.leader = new_leader
+        pm.epoch += 1
+        pm.isr = {b for b in pm.replicas
+                  if net.reachable(new_leader, b)}
+        pm.isr.add(new_leader)
+        pm.isr.discard(old)
+        pm.electing_until = now + self.cfg["election_time"]
+        pm.leader_lost_since = None
+        self._belief[(new_leader, pm.topic, pm.partition)] = (True, pm.epoch)
+        self.engine.monitor.event(now, "leader_elected", topic=pm.topic,
+                                  partition=pm.partition, old=old,
+                                  new=new_leader, epoch=pm.epoch)
         # Waiters parked on the deposed leader must re-resolve metadata;
         # commit (and re-notify) once the election window closes.
-        self._notify(meta.name)
-        self.engine.schedule(self.cfg["election_time"],
-                             lambda: self._post_election(meta.name))
+        self._notify(pm.topic)
+        self.engine.schedule(
+            self.cfg["election_time"],
+            lambda: self._post_election(pm.topic, pm.partition))
 
-    def _post_election(self, topic: str) -> None:
-        self._maybe_commit(topic)
+    def _post_election(self, topic: str, partition: int) -> None:
+        self._maybe_commit(topic, partition)
         self._notify(topic)
 
-    def _manage_isr(self, meta: TopicMeta, ctrl: Optional[str],
+    def _manage_isr(self, pm: PartitionMeta, ctrl: Optional[str],
                     now: float) -> None:
         net = self.engine.net
-        leader = meta.leader
+        leader = pm.leader
         if ctrl is None or not net.reachable(ctrl, leader):
             return      # ISR changes must go through the controller
         # replicas order, not set order (same determinism contract as
         # _replicate: shrink events and commit/notify order must not
         # depend on per-process hash randomization)
-        for b in [x for x in meta.replicas if x in meta.isr]:
+        for b in [x for x in pm.replicas if x in pm.isr]:
             if b != leader and not net.reachable(leader, b):
-                meta.isr.discard(b)
-                self._maybe_commit(meta.name)
+                pm.isr.discard(b)
+                self._maybe_commit(pm.topic, pm.partition)
                 self.engine.monitor.event(now, "isr_shrink",
-                                          topic=meta.name, broker=b)
-        for b in meta.replicas:
-            if b not in meta.isr and net.reachable(leader, b) \
+                                          topic=pm.topic,
+                                          partition=pm.partition, broker=b)
+        for b in pm.replicas:
+            if b not in pm.isr and net.reachable(leader, b) \
                     and net.host_up(b):
-                self._catch_up(b, meta)
-                meta.isr.add(b)
-                meta.isr_since[b] = now
+                self._catch_up(b, pm)
+                pm.isr.add(b)
+                pm.isr_since[b] = now
                 self.engine.monitor.event(now, "isr_expand",
-                                          topic=meta.name, broker=b)
+                                          topic=pm.topic,
+                                          partition=pm.partition, broker=b)
 
-    def _catch_up(self, b: str, meta: TopicMeta) -> None:
+    def _catch_up(self, b: str, pm: PartitionMeta) -> None:
         """Rejoining replica truncates divergence and copies leader's log.
 
         zk mode loses the stale leader's partition-era writes here (paper
         Fig. 6b): records that exist only in the rejoining replica are
         dropped.
         """
-        leader_log = self._log(meta.leader, meta.name)
-        rl = self._log(b, meta.name)
+        leader_log = self._log(pm.leader, pm.topic, pm.partition)
+        rl = self._log(b, pm.topic, pm.partition)
         if rl is leader_log:
             return
         lost = rl.truncate_to(leader_log)
         nbytes = leader_log.batch.total_bytes()
         if nbytes:
-            self.engine.monitor.broker_tx(meta.leader, nbytes)
+            self.engine.monitor.broker_tx(pm.leader, nbytes)
             self.engine.monitor.broker_rx(b, nbytes)
         for r in lost:
-            if r.epoch < meta.epoch:
+            if r.epoch < pm.epoch:
                 self.engine.monitor.truncated(r, self.engine.now)
-                self._pending.pop(r.msg_id, None)
 
-    def _preferred_rebalance(self, meta: TopicMeta, ctrl: Optional[str],
+    def _preferred_rebalance(self, pm: PartitionMeta, ctrl: Optional[str],
                              now: float) -> None:
-        preferred = meta.replicas[0]
-        stable = (now - meta.isr_since.get(preferred, -1e9)
+        preferred = pm.replicas[0]
+        stable = (now - pm.isr_since.get(preferred, -1e9)
                   >= self.cfg["rebalance_interval"])
-        if (meta.leader != preferred and preferred in meta.isr and stable
+        if (pm.leader != preferred and preferred in pm.isr and stable
                 and ctrl is not None
                 and self.engine.net.reachable(ctrl, preferred)
-                and now >= meta.electing_until):
-            old = meta.leader
-            self._catch_up(preferred, meta)
-            meta.leader = preferred
-            meta.epoch += 1
-            self._belief[(preferred, meta.name)] = (True, meta.epoch)
-            self._belief[(old, meta.name)] = (False, meta.epoch)
+                and now >= pm.electing_until):
+            old = pm.leader
+            self._catch_up(preferred, pm)
+            pm.leader = preferred
+            pm.epoch += 1
+            self._belief[(preferred, pm.topic, pm.partition)] = (True,
+                                                                 pm.epoch)
+            self._belief[(old, pm.topic, pm.partition)] = (False, pm.epoch)
             self.engine.monitor.event(now, "preferred_leader_restored",
-                                      topic=meta.name, old=old,
-                                      new=preferred, epoch=meta.epoch)
-            self._maybe_commit(meta.name)
-            self._notify(meta.name)
+                                      topic=pm.topic,
+                                      partition=pm.partition, old=old,
+                                      new=preferred, epoch=pm.epoch)
+            self._maybe_commit(pm.topic, pm.partition)
+            self._notify(pm.topic)

@@ -118,7 +118,8 @@ class Engine:
         self.cluster = Cluster(self, spec.broker_hosts(), mode=spec.mode,
                                **broker_cfg)
         for t in spec.topics.values():
-            self.cluster.create_topic(t.name, t.leader, t.replication)
+            self.cluster.create_topic(t.name, t.leader, t.replication,
+                                      getattr(t, "partitions", 1))
 
         # instantiate component runtimes (factories live in stubs/spe)
         from repro.core import spe as spe_mod
@@ -214,12 +215,26 @@ class Engine:
         nondeterministic ones).
         """
         mon = self.monitor
-        # a message is lost/partial against its topic's *subscribers*
-        # (consumers follow topic subsets; see Monitor.loss_report for
-        # the all-consumers variant used by the Fig. 6 experiments)
-        n_subs = {t: len(cs) for t, cs in self.cluster.subs.items()}
+        cluster = self.cluster
+        # a message is lost/partial against its topic's subscriber
+        # *groups*: a group delivers each record to exactly one member,
+        # and an ungrouped consumer is its own implicit group (see
+        # Monitor.loss_report for the all-consumers Fig. 6 variant)
+        n_subs = {t: len({cluster.group_of(c) for c in cs})
+                  for t, cs in cluster.subs.items()}
         delivered = expired = truncated = lost = 0
         lats: list[float] = []
+        # per-(topic, partition) tallies, sorted keys for the
+        # cross-process fingerprint contract
+        part_produced: dict[str, int] = {}
+        part_delivered: dict[str, int] = {}
+        part_bytes: dict[str, int] = {}
+        part_lat_sum: dict[str, float] = {}
+        for name in sorted(cluster.topics):
+            for p in range(cluster.topics[name].n_partitions):
+                k = f"{name}/{p}"
+                part_produced[k] = part_delivered[k] = part_bytes[k] = 0
+                part_lat_sum[k] = 0.0
         for m in mon.msgs.values():
             delivered += len(m.deliveries)
             expired += m.expired_time is not None
@@ -227,8 +242,33 @@ class Engine:
             expected = n_subs.get(m.topic, 0)
             if expected and len(m.deliveries) < expected:
                 lost += 1
+            pk = f"{m.topic}/{m.partition}"
+            if pk in part_produced:
+                part_produced[pk] += 1
+                part_delivered[pk] += len(m.deliveries)
+                part_bytes[pk] += m.size * len(m.deliveries)
             for t in m.deliveries.values():
                 lats.append(t - m.produce_time)
+                if pk in part_lat_sum:
+                    part_lat_sum[pk] += t - m.produce_time
+        # per-partition mean produce→deliver latency (the partition-level
+        # e2e signal; unit-based e2e stays pipeline-global)
+        part_e2e = {k: (part_lat_sum[k] / part_delivered[k]
+                        if part_delivered[k] else 0.0)
+                    for k in sorted(part_lat_sum)}
+        # explicit consumer-group lag: HW minus committed offset, summed
+        # over the group's partitions at the end of the run
+        group_lag: dict[str, int] = {}
+        for (gname, topic), gs in sorted(cluster.groups.items()):
+            if not gs.explicit:
+                continue
+            lag = 0
+            for p, pm in enumerate(cluster.topics[topic].parts):
+                log = cluster.logs[pm.leader].get((topic, p))
+                hw = log.hw if log is not None else 0
+                lag += max(0, hw - cluster.committed_offset(topic, p,
+                                                            gname))
+            group_lag[f"{gname}:{topic}"] = lag
         e2e = mon.e2e_latency()
         util = self.resource_report()
         return {
@@ -252,6 +292,17 @@ class Engine:
             "e2e_count": len(e2e),
             "e2e_sum": float(sum(e2e)),
             "e2e_mean": float(sum(e2e) / len(e2e)) if e2e else 0.0,
+            "n_partitions": sum(m.n_partitions
+                                for m in cluster.topics.values()),
+            "n_groups": len({gs.group for gs in cluster.groups.values()
+                             if gs.explicit}),
+            "group_rebalances": len(mon.events_of("group_rebalance")),
+            "produce_batches": cluster.n_produce_batches,
+            "partition_produced": part_produced,
+            "partition_delivered": part_delivered,
+            "partition_bytes": part_bytes,
+            "partition_e2e_mean": part_e2e,
+            "group_lag": group_lag,
             "reach_queries": self.net.n_reach_queries,
             "path_queries": self.net.n_path_queries,
             "reach_computes": self.net.n_graph_builds,

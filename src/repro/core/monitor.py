@@ -19,6 +19,7 @@ class MsgStat:
     producer: str
     size: int
     produce_time: float
+    partition: int = 0
     ack_time: Optional[float] = None
     expired_time: Optional[float] = None
     truncated_time: Optional[float] = None
@@ -44,7 +45,8 @@ class Monitor:
 
     def produced(self, rec) -> None:
         self.msgs[rec.msg_id] = MsgStat(
-            rec.msg_id, rec.topic, rec.producer, rec.size, rec.produce_time)
+            rec.msg_id, rec.topic, rec.producer, rec.size, rec.produce_time,
+            getattr(rec, "partition", 0))
 
     def committed(self, rec, t: float) -> None:
         self.msgs[rec.msg_id].ack_time = t

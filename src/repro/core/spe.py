@@ -57,6 +57,9 @@ class SPERuntime(DeliveryLoop):
         self.name = comp.name
         self.in_topic = comp.get("inTopic") or comp.get("topic")
         self.out_topic = comp.get("outTopic")
+        # SPEs scale horizontally like consumers: same group = split the
+        # input topic's partitions
+        self.group = comp.get("group")
         self.query_name = comp.get("query", "identity")
         self.window_s = float(comp.get("window", 0.0))
         self.poll_interval = float(comp.get("pollInterval", 0.1))

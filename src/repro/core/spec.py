@@ -48,8 +48,10 @@ class Component:
 @dataclass
 class TopicCfg:
     name: str
-    leader: Optional[str] = None    # preferred leader broker host
+    leader: Optional[str] = None    # preferred leader of partition 0
     replication: int = 1
+    partitions: int = 1             # per-partition leaders rotate from
+                                    # ``leader`` over the broker list
 
 
 @dataclass
@@ -164,8 +166,9 @@ class PipelineSpec:
         return self._add_component(host, Component(STORE, type, cfg))
 
     def add_topic(self, name: str, *, leader: Optional[str] = None,
-                  replication: int = 1) -> "PipelineSpec":
-        self.topics[name] = TopicCfg(name, leader, replication)
+                  replication: int = 1,
+                  partitions: int = 1) -> "PipelineSpec":
+        self.topics[name] = TopicCfg(name, leader, replication, partitions)
         return self
 
     def add_fault(self, at: float, kind: str, *target: str,
@@ -211,6 +214,10 @@ class PipelineSpec:
                 problems.append(
                     f"topic {t.name}: replication {t.replication} > "
                     f"{len(brokers)} brokers")
+            if t.partitions < 1:
+                problems.append(
+                    f"topic {t.name}: partitions must be >= 1, "
+                    f"got {t.partitions}")
         for f in self.faults:
             if f.kind == "link_down" and len(f.target) != 2:
                 problems.append(f"fault {f}: link_down needs (a, b)")
@@ -263,7 +270,8 @@ def from_graphml(path: str, *, mode: Optional[str] = None,
     if "topicCfg" in g.graph:
         for t in _load_cfg(g.graph["topicCfg"], base).get("topics", []):
             spec.add_topic(t["name"], leader=t.get("leader"),
-                           replication=int(t.get("replication", 1)))
+                           replication=int(t.get("replication", 1)),
+                           partitions=int(t.get("partitions", 1)))
     if "faultCfg" in g.graph:
         for f in _load_cfg(g.graph["faultCfg"], base).get("faults", []):
             spec.add_fault(

@@ -40,6 +40,12 @@ class ProducerBase:
         self.name = comp.name
         self.topic = comp.get("topicName") or comp.get("topic")
         self.sent = 0
+        # produce batching (Kafka linger.ms / batch.size) + keyed routing
+        self.linger_s = float(comp.get("lingerMs", 0.0)) / 1e3
+        self.batch_bytes = int(comp.get("batchBytes", 1 << 14))
+        # nKeys > 0: cycle a deterministic key space (no RNG draw, so
+        # keyed runs stay bit-comparable with unkeyed ones elsewhere)
+        self.n_keys = int(comp.get("nKeys", 0))
 
     def start(self, eng) -> None:
         # own deterministic stream: producer schedules are independent of
@@ -53,12 +59,17 @@ class ProducerBase:
 
     def produce(self, eng, payload: Any, size: int,
                 topic: Optional[str] = None,
-                unit: Optional[Any] = None) -> None:
+                unit: Optional[Any] = None,
+                key: Optional[Any] = None) -> None:
         if unit is not None:
             eng.monitor.event(eng.now, "unit_in", unit=unit)
             payload = {"unit": unit, "data": payload}
+        if key is None and self.n_keys:
+            key = f"{self.name}/k{self.sent % self.n_keys}"
         eng.cluster.produce(self.host, self.name, topic or self.topic,
-                            payload, size)
+                            payload, size, key=key,
+                            linger_s=self.linger_s,
+                            batch_bytes=self.batch_bytes)
         self.sent += 1
 
 
@@ -203,6 +214,9 @@ class ConsumerBase(DeliveryLoop):
         self.name = comp.name
         t = comp.get("topics") or comp.get("topic") or comp.get("topicName")
         self.topics = [t] if isinstance(t, str) else list(t or [])
+        # consumer group: members sharing a group split partitions and
+        # share committed offsets; None = implicit solo group
+        self.group = comp.get("group")
         self.poll_interval = float(comp.get("pollInterval", 0.1))
         self.per_record_cost = float(comp.get("perRecordCost", 0.0))
         self.n_received = 0

@@ -6,13 +6,21 @@ fetches in the two delivery modes (``spec.delivery``):
 
 ``wakeup`` (default)
     After an empty fetch the subscriber parks as a cluster *waiter*; the
-    cluster wakes it when the topic's high watermark advances past its
-    offset (or leadership changes).  An idle subscriber costs **zero**
-    events — the old ``poll_interval=0.1`` path generated millions of
-    no-op events over long sweeps.  When a fetch is *blocked* (leader
-    unreachable, election in progress, stale metadata, lost response)
-    the loop degrades to interval retries, so fault scenarios behave
-    like polling until the cluster is healthy again.
+    cluster wakes it when any of the topic's partition high watermarks
+    advances past its offset (or leadership changes, or its consumer
+    group rebalances).  An idle subscriber costs **zero** events — the
+    old ``poll_interval=0.1`` path generated millions of no-op events
+    over long sweeps.  When a fetch is *blocked* (leader unreachable,
+    election in progress, stale metadata, lost response) the loop
+    degrades to interval retries, so fault scenarios behave like polling
+    until the cluster is healthy again.
+
+One ``Cluster.fetch`` call serves every partition the subscriber
+currently owns (its group assignment), returning one combined status, so
+the per-(subscriber, topic) invariant below is unchanged by partitioning:
+a group rebalance simply makes the next fetch read a different partition
+set, and ``_notify`` wakes parked members so none hangs on a stale
+assignment.
 
 ``poll``
     The legacy fixed-interval loop, kept behind the spec flag for parity

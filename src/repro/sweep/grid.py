@@ -12,6 +12,14 @@ result is reused.  Only the builder's *import path* is hashed, not its
 code — after editing builder or engine internals, clear the cache dir
 (or pass ``force=True`` to the runner) to avoid reusing stale results.
 
+Axes are plain param names resolved by the builder — the default
+:func:`~repro.sweep.scenarios.build_scenario` understands the partition
+family (``partitions``, ``consumer_groups``, ``linger_ms``, ``n_keys``)
+alongside the earlier topology/broker/fault knobs, and every axis value
+(partitions included) is part of the scenario content hash, so the
+resume cache and the cross-process fingerprint contract extend to the
+partitioned grids unchanged.
+
 Builders must be importable module-level functions (the parallel runner
 ships them to spawn-based worker processes by reference).  The optional
 ``derive`` hook rewrites each params dict at expansion time — in the

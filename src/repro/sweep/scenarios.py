@@ -13,7 +13,17 @@ topology      generator name (default "star"); ``topo`` = extra kwargs;
 n_hosts       REQUIRED — emulated host count (switches come on top)
 n_brokers     brokers on the first hosts (default 3, capped to n_hosts-1)
 replication / n_topics / n_producers / n_consumers
+partitions    partitions per topic (default 1; per-partition leaders
+              rotate over the broker list)
+consumer_groups
+              g > 0 assigns consumer i the group "g{i % g}": members of
+              one group split each subscribed topic's partitions via the
+              range assignor and share committed offsets
 rate_kbps / msg_size        SYNTHETIC producer knobs
+linger_ms / batch_bytes     producer batch accumulator (Kafka linger.ms
+                            / batch.size; 0 = legacy per-record produce)
+n_keys        > 0 routes producer records over a cycling key space
+              (keyed partitioning); 0 = unkeyed round-robin
 poll_interval               subscriber cadence (also the wakeup fallback)
 delivery / mode             "wakeup"|"poll", "zk"|"kraft"
 broker_cfg    dict merged into every broker component (Table I brokerCfg)
@@ -51,24 +61,32 @@ def build_scenario(p: dict) -> PipelineSpec:
         spec.add_broker(b, **dict(p.get("broker_cfg", {})))
     n_topics = max(1, int(p.get("n_topics", n_brokers)))
     replication = max(1, min(int(p.get("replication", 1)), n_brokers))
+    partitions = max(1, int(p.get("partitions", 1)))
     topics = [f"t{i}" for i in range(n_topics)]
     for i, t in enumerate(topics):
         spec.add_topic(t, leader=brokers[i % n_brokers],
-                       replication=replication)
+                       replication=replication, partitions=partitions)
 
     rest = hosts[n_brokers:]
     n_prod = max(1, min(int(p.get("n_producers", n_topics)), len(rest)))
     for i, h in enumerate(rest[:n_prod]):
         spec.add_producer(h, "SYNTHETIC", topics=[topics[i % n_topics]],
                           rateKbps=float(p.get("rate_kbps", 8.0)),
-                          msgSize=int(p.get("msg_size", 512)))
+                          msgSize=int(p.get("msg_size", 512)),
+                          lingerMs=float(p.get("linger_ms", 0.0)),
+                          batchBytes=int(p.get("batch_bytes", 1 << 14)),
+                          nKeys=int(p.get("n_keys", 0)))
     consumers = rest[n_prod:]
     if "n_consumers" in p:
         consumers = consumers[:int(p["n_consumers"])]
+    n_groups = int(p.get("consumer_groups", 0))
     for i, h in enumerate(consumers):
         subs = {topics[i % n_topics], topics[(i + 1) % n_topics]}
-        spec.add_consumer(h, "STANDARD", topics=sorted(subs),
-                          pollInterval=float(p.get("poll_interval", 0.1)))
+        cfg = dict(topics=sorted(subs),
+                   pollInterval=float(p.get("poll_interval", 0.1)))
+        if n_groups > 0:
+            cfg["group"] = f"g{i % n_groups}"
+        spec.add_consumer(h, "STANDARD", **cfg)
     _install_fault(spec, p, brokers)
     return spec
 

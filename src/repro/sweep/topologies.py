@@ -23,7 +23,10 @@ Generators:
 ``tree``      balanced switch tree, hosts round-robin on the leaves
 ``fat_tree``  k-ary fat-tree (core/aggregation/edge) sized to n_hosts
 ``geo_wan``   random geographic WAN: sites uniform in a square, MST
-              backbone plus shortcut edges, latency from link distance
+              backbone plus shortcut edges, latency from link distance;
+              ``core_frac > 0`` adds a heterogeneous two-tier model
+              (provisioned core fiber vs bandwidth/latency-drawn access
+              links)
 """
 from __future__ import annotations
 
@@ -150,7 +153,10 @@ def fat_tree(n_hosts: int, *, seed: int = 0, k: int = 0,
 
 def geo_wan(n_hosts: int, *, seed: int = 0, extent_km: float = 5_000.0,
             extra_edge_frac: float = 0.3, bw_mbps: float = 1_000.0,
-            loss_pct: float = 0.0, km_per_ms: float = 200.0) -> nx.Graph:
+            loss_pct: float = 0.0, km_per_ms: float = 200.0,
+            core_frac: float = 0.0, core_bw_mbps: float = 10_000.0,
+            access_bw_range: tuple = (100.0, 400.0),
+            access_extra_lat_ms: tuple = (0.2, 2.0)) -> nx.Graph:
     """Random geographic WAN with latency drawn from link distance.
 
     Sites are placed uniformly in an ``extent_km`` square; the backbone
@@ -158,6 +164,18 @@ def geo_wan(n_hosts: int, *, seed: int = 0, extent_km: float = 5_000.0,
     ``extra_edge_frac * n_hosts`` random shortcut edges for path
     redundancy.  Link latency is distance over the fiber propagation
     speed (~200 km/ms); site coordinates live in ``g.graph["pos"]``.
+
+    **Heterogeneous tiers** (``core_frac > 0``): a seed-drawn sample of
+    ``core_frac * n_hosts`` sites (min 2) forms the *core* tier.  Links
+    between two core sites are provisioned backbone fiber — fixed
+    ``core_bw_mbps``, pure propagation latency — while every other
+    (*access*) link draws its bandwidth uniformly from
+    ``access_bw_range`` and adds a last-mile latency penalty drawn from
+    ``access_extra_lat_ms``.  All draws come from the one seeded stream
+    in deterministic wiring order, so a fixed (n_hosts, seed, kwargs)
+    still reproduces the identical graph; ``core_frac=0`` (default)
+    draws nothing extra and reproduces the homogeneous legacy graph
+    bit-for-bit.  Core site names live in ``g.graph["core"]``.
     """
     rng = random.Random(seed)
     g = _new_graph("geo_wan")
@@ -167,6 +185,11 @@ def geo_wan(n_hosts: int, *, seed: int = 0, extent_km: float = 5_000.0,
         pos[h] = (rng.uniform(0.0, extent_km), rng.uniform(0.0, extent_km))
     g.graph["pos"] = pos
     hosts = g.graph["hosts"]
+    core: set[str] = set()
+    if core_frac > 0 and n_hosts >= 2:
+        k = min(n_hosts, max(2, round(core_frac * n_hosts)))
+        core = set(rng.sample(hosts, k))
+    g.graph["core"] = sorted(core)
     if n_hosts <= 1:
         return g
 
@@ -175,8 +198,15 @@ def geo_wan(n_hosts: int, *, seed: int = 0, extent_km: float = 5_000.0,
         return math.hypot(ax - bx, ay - by)
 
     def wire(a: str, b: str) -> None:
-        _link(g, a, b, lat_ms=max(0.05, dist(a, b) / km_per_ms),
-              bw_mbps=bw_mbps, loss_pct=loss_pct)
+        lat = max(0.05, dist(a, b) / km_per_ms)
+        if not core:
+            bw = bw_mbps
+        elif a in core and b in core:
+            bw = core_bw_mbps
+        else:
+            lat += rng.uniform(*access_extra_lat_ms)
+            bw = rng.uniform(*access_bw_range)
+        _link(g, a, b, lat_ms=lat, bw_mbps=bw, loss_pct=loss_pct)
 
     # Prim's MST (deterministic: distance then name tie-break)
     best = {h: (dist(hosts[0], h), hosts[0]) for h in hosts[1:]}

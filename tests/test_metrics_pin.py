@@ -1,0 +1,103 @@
+"""Fingerprint-parity regression pin (partition refactor, PR 3).
+
+``partitions=1`` + unkeyed producers + ``linger_ms=0`` must reproduce
+the pre-partition engine *exactly*: the values below are
+``Engine.metrics()`` outputs for the CI sweep-smoke grid captured at the
+pre-refactor commit (PR 2 head).  Every pinned field — event counts, RNG-
+dependent latencies at full float precision, delivery tallies — must
+still match bit-for-bit.  New fields added by the refactor (per-partition
+tallies, ``produce_batches``, …) are intentionally not pinned; moved
+fields are covered by the compat shims (``TopicMeta`` proxies, string-
+keyed ``cluster.logs``).
+"""
+import pytest
+
+from repro.sweep import SweepSpec, run_sweep
+
+GRID = SweepSpec(
+    name="ci_smoke_pin",
+    axes={"n_hosts": [8, 12], "delivery": ["poll", "wakeup"]},
+    base={"topology": "star", "n_brokers": 1, "n_topics": 2,
+          "n_producers": 2, "rate_kbps": 16.0, "horizon": 10.0,
+          "seed": 0})
+
+# captured pre-refactor (PR 2), wall_s excluded
+PINNED = {
+    (8, "poll"): {
+        "sim_s": 10.0, "engine_events": 1464, "events_scheduled": 1472,
+        "events_cancelled": 0, "records_produced": 80,
+        "records_delivered": 392, "records_expired": 0,
+        "records_truncated": 0, "lost_or_partial": 2, "elections": 0,
+        "isr_changes": 0, "latency_count": 392,
+        "latency_mean": 0.056302812448791574,
+        "latency_p50": 0.056507552104038294,
+        "latency_p99": 0.10532483557949673,
+        "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
+        "reach_queries": 160, "path_queries": 1472, "reach_computes": 9,
+        "max_util_pct": 0.0051024000000000095,
+    },
+    (8, "wakeup"): {
+        "sim_s": 10.0, "engine_events": 1380, "events_scheduled": 1383,
+        "events_cancelled": 0, "records_produced": 80,
+        "records_delivered": 400, "records_expired": 0,
+        "records_truncated": 0, "lost_or_partial": 0, "elections": 0,
+        "isr_changes": 0, "latency_count": 400,
+        "latency_mean": 0.007226228840132699,
+        "latency_p50": 0.006008704000000975,
+        "latency_p99": 0.05769052315344608,
+        "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
+        "reach_queries": 160, "path_queries": 880, "reach_computes": 9,
+        "max_util_pct": 0.0051024000000000095,
+    },
+    (12, "poll"): {
+        "sim_s": 10.0, "engine_events": 2488, "events_scheduled": 2500,
+        "events_cancelled": 0, "records_produced": 80,
+        "records_delivered": 704, "records_expired": 0,
+        "records_truncated": 0, "lost_or_partial": 2, "elections": 0,
+        "isr_changes": 0, "latency_count": 704,
+        "latency_mean": 0.056440487212311895,
+        "latency_p50": 0.05685140816304002,
+        "latency_p99": 0.1051640393845605,
+        "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
+        "reach_queries": 172, "path_queries": 2584, "reach_computes": 13,
+        "max_util_pct": 0.0051024000000000095,
+    },
+    (12, "wakeup"): {
+        "sim_s": 10.0, "engine_events": 2340, "events_scheduled": 2343,
+        "events_cancelled": 0, "records_produced": 80,
+        "records_delivered": 720, "records_expired": 0,
+        "records_truncated": 0, "lost_or_partial": 0, "elections": 0,
+        "isr_changes": 0, "latency_count": 720,
+        "latency_mean": 0.007149962732744778,
+        "latency_p50": 0.006008704000000975,
+        "latency_p99": 0.05761361523774846,
+        "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
+        "reach_queries": 172, "path_queries": 1520, "reach_computes": 13,
+        "max_util_pct": 0.0051024000000000095,
+    },
+}
+
+
+@pytest.fixture(scope="module")
+def rows():
+    res = run_sweep(GRID, workers=1, cache_dir=None)
+    return {(r["params"]["n_hosts"], r["params"]["delivery"]): r["metrics"]
+            for r in res.rows}
+
+
+@pytest.mark.parametrize("key", sorted(PINNED))
+def test_pre_refactor_metrics_reproduced_exactly(rows, key):
+    got = rows[key]
+    for field, want in PINNED[key].items():
+        assert got[field] == want, \
+            f"{key}: metrics[{field!r}] = {got[field]!r}, pinned {want!r}"
+
+
+def test_new_fields_are_single_partition_shaped(rows):
+    # the refactor's additions must describe the degenerate layout:
+    # 2 topics x 1 partition, no groups, one batch per record
+    for key, got in rows.items():
+        assert got["n_partitions"] == 2
+        assert got["n_groups"] == 0 and got["group_lag"] == {}
+        assert got["produce_batches"] == got["records_produced"]
+        assert set(got["partition_produced"]) == {"t0/0", "t1/0"}

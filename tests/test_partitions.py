@@ -1,0 +1,192 @@
+"""Partitioned topics + consumer groups: routing, ordering, assignment,
+independent per-partition leaders, and the single-partition compat shims.
+"""
+import zlib
+
+import pytest
+
+from repro.core import Engine, PipelineSpec
+from repro.core.broker import key_partition
+
+
+def star(n_brokers=1, *, partitions=4, replication=1, n_keys=0,
+         n_consumers=1, group=None, total=40, rate_kbps=50.0,
+         delivery="wakeup", consumer_type="METRICS"):
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    brokers = [f"b{i}" for i in range(1, n_brokers + 1)]
+    for b in brokers:
+        spec.add_host(b).add_link(b, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(b)
+    spec.add_topic("t", leader=brokers[0], replication=replication,
+                   partitions=partitions)
+    spec.add_host("p").add_link("p", "s1", lat=1.0, bw=100.0)
+    spec.add_producer("p", "SYNTHETIC", topics=["t"], rateKbps=rate_kbps,
+                      msgSize=500, totalMessages=total, nKeys=n_keys)
+    for i in range(n_consumers):
+        h = f"c{i}"
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=100.0)
+        cfg = dict(topics=["t"], pollInterval=0.2)
+        if group:
+            cfg["group"] = group
+        spec.add_consumer(h, consumer_type, **cfg)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def test_key_partition_is_crc32_stable():
+    # stable across processes (unlike hash()), and within range
+    for key in ("a", "user:17", 42):
+        assert key_partition(key, 4) == zlib.crc32(str(key).encode()) % 4
+        assert 0 <= key_partition(key, 7) < 7
+
+
+def test_unkeyed_round_robin_splits_evenly():
+    eng = Engine(star(partitions=4, total=40), seed=0)
+    m = eng.run_metrics(until=30.0)
+    assert m["partition_produced"] == {f"t/{p}": 10 for p in range(4)}
+    assert m["records_delivered"] == 40
+
+
+def test_keyed_records_stay_on_one_partition():
+    eng = Engine(star(partitions=4, n_keys=6, total=48), seed=1)
+    eng.run(until=30.0)
+    cluster = eng.cluster
+    leader_of = {p: pm.leader for p, pm in
+                 enumerate(cluster.topics["t"].parts)}
+    key_parts = {}
+    for p, lead in leader_of.items():
+        log = cluster.logs[lead].get(("t", p))
+        for k in (log.batch.keys[:log.leo] if log else []):
+            key_parts.setdefault(k, set()).add(p)
+    assert key_parts, "keyed records must land in partition logs"
+    for k, parts in key_parts.items():
+        assert len(parts) == 1, f"key {k} split across partitions {parts}"
+        assert parts == {key_partition(k, 4)}
+
+
+def test_per_key_delivery_order_matches_produce_order():
+    # same key -> same partition -> delivered in produce (seq) order
+    eng = Engine(star(partitions=4, n_keys=3, total=60), seed=2)
+    eng.run(until=40.0)
+    sink = [rt for rt in eng.runtimes if rt.name.startswith("consumer")][0]
+    seqs = [p["seq"] for p in sink.payloads]
+    assert len(seqs) == 60
+    for j in range(3):                      # nKeys=3: key index = seq % 3
+        per_key = [s for s in seqs if s % 3 == j]
+        assert per_key == sorted(per_key)
+
+
+# ---------------------------------------------------------------------------
+# Consumer groups: range assignor, shared offsets, exactly-once per group
+# ---------------------------------------------------------------------------
+
+
+def test_range_assignor_contiguous_and_disjoint():
+    eng = Engine(star(partitions=5, n_consumers=2, group="g"), seed=0)
+    eng.run(until=5.0)              # subscriptions register at run start
+    cluster = eng.cluster
+    members = sorted(c.name for cs in cluster.subs.values() for c in cs)
+    assigned = {c.name: cluster.assigned_partitions(c, "t")
+                for c in cluster.subs["t"]}
+    parts = sorted(p for ps in assigned.values() for p in ps)
+    assert parts == [0, 1, 2, 3, 4]         # disjoint cover
+    for name in members:
+        ps = assigned[name]
+        assert ps == list(range(ps[0], ps[-1] + 1))   # contiguous range
+    sizes = sorted(len(ps) for ps in assigned.values())
+    assert sizes == [2, 3]                  # balanced contiguous ranges
+
+
+def test_surplus_group_member_idles():
+    eng = Engine(star(partitions=2, n_consumers=3, group="g", total=20),
+                 seed=3)
+    m = eng.run_metrics(until=20.0)
+    cluster = eng.cluster
+    assigned = {c.name: cluster.assigned_partitions(c, "t")
+                for c in cluster.subs["t"]}
+    assert sorted(len(ps) for ps in assigned.values()) == [0, 1, 1]
+    # a group delivers each record to exactly one member
+    assert m["records_delivered"] == m["records_produced"] == 20
+    assert m["lost_or_partial"] == 0
+
+
+def test_group_delivers_each_record_once_solo_consumer_gets_all():
+    # 2-member group + 1 ungrouped consumer on the same topic:
+    # group sees each record once, the solo consumer sees every record
+    spec = star(partitions=4, n_consumers=2, group="g", total=24)
+    spec.add_host("solo").add_link("solo", "s1", lat=1.0, bw=100.0)
+    spec.add_consumer("solo", "STANDARD", topics=["t"], pollInterval=0.2)
+    eng = Engine(spec, seed=4)
+    mon = eng.run(until=30.0)
+    group_members = {c.name for c in eng.cluster.subs["t"]
+                     if getattr(c, "group", None) == "g"}
+    solo = next(c.name for c in eng.cluster.subs["t"]
+                if getattr(c, "group", None) is None)
+    for m in mon.msgs.values():
+        assert sum(1 for c in m.deliveries if c in group_members) == 1
+        assert solo in m.deliveries
+    # both explicit-group metrics surface
+    met = eng.metrics()
+    assert met["n_groups"] == 1
+    assert met["group_lag"] == {"g:t": 0}
+
+
+# ---------------------------------------------------------------------------
+# Independent per-partition leaders
+# ---------------------------------------------------------------------------
+
+
+def test_partition_leaders_rotate_over_brokers():
+    eng = Engine(star(n_brokers=3, partitions=4, replication=2), seed=0)
+    meta = eng.cluster.topics["t"]
+    assert [pm.leader for pm in meta.parts] == ["b1", "b2", "b3", "b1"]
+    for pm in meta.parts:
+        assert len(pm.replicas) == 2 and pm.replicas[0] == pm.leader
+
+
+def test_broker_failure_orphans_only_its_partitions():
+    # b1 leads partitions 0 and 2, b2 leads 1, b3 leads 3 (4 partitions,
+    # 3 brokers); cutting b1 must elect new leaders for exactly {0, 2}
+    spec = star(n_brokers=3, partitions=4, replication=3, total=200,
+                rate_kbps=40.0)
+    spec.add_fault(10.0, "link_down", "b1", "s1", duration=20.0)
+    eng = Engine(spec, seed=5)
+    mon = eng.run(until=60.0)
+    # b1 leads partitions 0 and 3 (rotation wraps 4 % 3); both re-elect,
+    # partitions led by b2/b3 must not
+    elected = {e["partition"] for e in mon.events_of("leader_elected")}
+    assert elected == {0, 3}
+    for p in (1, 2):
+        assert eng.cluster.topics["t"].parts[p].epoch == 0
+
+
+def test_single_partition_compat_shims():
+    eng = Engine(star(n_brokers=3, partitions=1, replication=2), seed=0)
+    meta = eng.cluster.topics["t"]
+    # TopicMeta proxies forward to partition 0
+    assert meta.leader == meta.parts[0].leader == "b1"
+    assert meta.replicas == meta.parts[0].replicas
+    assert meta.isr == meta.parts[0].isr
+    assert meta.epoch == 0 and meta.electing_until < 0
+    # _LogMap accepts bare topic strings for partition 0
+    assert eng.cluster.logs["b1"]["t"] is eng.cluster.logs["b1"][("t", 0)]
+    assert eng.cluster.logs["b1"].get("t") is not None
+    assert "t" in eng.cluster.logs["b1"]
+
+
+def test_partition_metrics_and_validation():
+    eng = Engine(star(partitions=3, total=30), seed=6)
+    m = eng.run_metrics(until=30.0)
+    assert m["n_partitions"] == 3
+    assert sum(m["partition_produced"].values()) == 30
+    assert sum(m["partition_delivered"].values()) == m["records_delivered"]
+    assert all(v > 0 for v in m["partition_e2e_mean"].values())
+    bad = star(partitions=4)
+    bad.topics["t"].partitions = 0
+    with pytest.raises(ValueError, match="partitions"):
+        Engine(bad)

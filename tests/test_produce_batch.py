@@ -1,0 +1,173 @@
+"""Produce batcher: vectorized extend_rows, linger/batch_bytes flush
+semantics, one ack/retry timer per batch, and delivery equivalence with
+the legacy per-record path.
+"""
+import numpy as np
+
+from repro.core import Engine, PipelineSpec, RecordBatch
+from repro.core.broker import Record, ReplicaLog
+
+
+# ---------------------------------------------------------------------------
+# RecordBatch.extend_rows
+# ---------------------------------------------------------------------------
+
+
+def test_extend_rows_matches_append_row():
+    a, b = RecordBatch(), RecordBatch()
+    rows = [(i + 1, 10 * (i + 1), 0.1 * i, i % 2, {"i": i}, f"p{i % 3}",
+             f"k{i % 4}") for i in range(9)]
+    for r in rows:
+        a.append_row(*r)
+    b.extend_rows([r[0] for r in rows], [r[1] for r in rows],
+                  [r[2] for r in rows], [r[3] for r in rows],
+                  [r[4] for r in rows], [r[5] for r in rows],
+                  [r[6] for r in rows])
+    assert a.n == b.n == 9
+    for col in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
+        assert np.array_equal(getattr(a, col)[:9], getattr(b, col)[:9])
+    assert a.payloads == b.payloads
+    assert a.producers == b.producers
+    assert a.keys == b.keys
+    assert b.total_bytes() == sum(r[1] for r in rows)
+
+
+def test_extend_rows_grows_and_chains_prefix_sum():
+    b = RecordBatch()
+    b.append_row(1, 5, 0.0, 0, "x", "p")
+    n = 3 * RecordBatch._MIN_CAP          # force capacity growth
+    first = b.extend_rows(list(range(2, n + 2)), [7] * n, [0.0] * n,
+                          [0] * n, ["y"] * n, ["p"] * n)
+    assert first == 1 and b.n == n + 1
+    assert b.total_bytes() == 5 + 7 * n
+    assert b.bytes_between(1, n + 1) == 7 * n
+    assert b.extend_rows([], [], [], [], [], []) == b.n   # no-op append
+
+
+def test_replica_log_append_batch_stamps_offsets_and_epoch():
+    rl = ReplicaLog("t", partition=2)
+    recs = [Record(i + 1, "t", f"v{i}", 10, 0.0, "p", partition=2,
+                   key="k") for i in range(4)]
+    out = rl.append_batch(recs, epoch=7)
+    assert [r.offset for r in out] == [0, 1, 2, 3]
+    assert all(r.epoch == 7 for r in out)
+    assert rl.leo == 4
+    assert all(r.partition == 2 for r in rl.records)
+    assert all(r.key == "k" for r in rl.records)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end linger behavior
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(*, linger_ms=0.0, batch_bytes=1 << 14, total=60,
+               rate_kbps=200.0, fault=None, mode="zk"):
+    spec = PipelineSpec(mode=mode)
+    spec.add_switch("s1")
+    spec.add_host("b1").add_link("b1", "s1", lat=1.0, bw=100.0)
+    spec.add_broker("b1")
+    spec.add_topic("t", leader="b1")
+    spec.add_host("p").add_link("p", "s1", lat=1.0, bw=100.0)
+    # 200 kbps / 500 B -> one record every 20 ms
+    spec.add_producer("p", "SYNTHETIC", topics=["t"], rateKbps=rate_kbps,
+                      msgSize=500, totalMessages=total,
+                      lingerMs=linger_ms, batchBytes=batch_bytes)
+    spec.add_host("c").add_link("c", "s1", lat=1.0, bw=100.0)
+    spec.add_consumer("c", "STANDARD", topics=["t"], pollInterval=0.1)
+    if fault:
+        spec.add_fault(*fault[0], **fault[1])
+    return spec
+
+
+def run_metrics(spec, seed=0, until=30.0):
+    eng = Engine(spec, seed=seed)
+    mon = eng.run(until=until)
+    return eng, mon
+
+
+def delivered_set(mon):
+    return sorted((mid, c) for mid, m in mon.msgs.items()
+                  for c in m.deliveries)
+
+
+def test_linger_zero_is_one_batch_per_record():
+    eng, mon = run_metrics(batch_spec(linger_ms=0.0))
+    assert eng.cluster.n_produce_batches == len(mon.msgs) == 60
+
+
+def test_linger_accumulates_and_preserves_delivery_set():
+    eng0, mon0 = run_metrics(batch_spec(linger_ms=0.0))
+    eng1, mon1 = run_metrics(batch_spec(linger_ms=100.0))
+    # ~5 records per 100 ms linger at one record / 20 ms
+    assert eng1.cluster.n_produce_batches * 4 <= \
+        eng0.cluster.n_produce_batches
+    assert delivered_set(mon0) == delivered_set(mon1)
+    assert len(delivered_set(mon1)) == 60
+    # batching cuts the produce-side event count too
+    assert eng1.n_events < eng0.n_events
+    # produce_time is stamped at produce() call, not at flush
+    times0 = sorted(m.produce_time for m in mon0.msgs.values())
+    times1 = sorted(m.produce_time for m in mon1.msgs.values())
+    assert times0 == times1
+
+
+def test_batch_bytes_flushes_before_linger():
+    # batch.size = 2 records; a huge linger must not delay the flush
+    eng, mon = run_metrics(batch_spec(linger_ms=60_000.0,
+                                      batch_bytes=1000))
+    assert eng.cluster.n_produce_batches == 30      # 60 records / 2
+    assert len(delivered_set(mon)) == 60
+
+
+def test_batch_retries_as_one_unit_through_fault():
+    # broker unreachable for a window: flushed batches buffer + retry
+    # (one retry timer per batch), then deliver after the heal — nothing
+    # expires, nothing is delivered twice
+    fault = ((5.0, "link_down", "b1", "s1"), {"duration": 10.0})
+    eng, mon = run_metrics(
+        batch_spec(linger_ms=100.0, total=100, fault=fault), until=80.0)
+    m = eng.metrics()
+    assert m["records_expired"] == 0
+    assert m["records_produced"] == 100
+    assert m["records_delivered"] == 100
+    assert max(len(s.deliveries) for s in mon.msgs.values()) == 1
+    assert m["produce_batches"] < 60    # retries never re-count a batch
+
+
+def test_metrics_produce_batches_is_deterministic():
+    runs = [run_metrics(batch_spec(linger_ms=100.0), seed=5)[0]
+            .metrics()["produce_batches"] for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+def test_retried_batches_keep_partition_log_in_produce_order():
+    # idempotent-producer sequencing: while the partition leader is
+    # unreachable, flushed batches queue FIFO behind one in-flight head;
+    # after failover they land in produce order — the log (and hence
+    # per-key delivery) is never reordered by independent retry timers
+    spec = PipelineSpec(mode="zk")
+    spec.add_switch("s1")
+    for b in ("b1", "b2", "b3"):
+        spec.add_host(b).add_link(b, "s1", lat=1.0, bw=100.0)
+        spec.add_broker(b)
+    spec.add_topic("t", leader="b1", replication=3, partitions=2)
+    spec.add_host("p").add_link("p", "s1", lat=1.0, bw=100.0)
+    spec.add_producer("p", "SYNTHETIC", topics=["t"], rateKbps=60.0,
+                      msgSize=500, totalMessages=200, nKeys=4,
+                      lingerMs=80.0)
+    spec.add_host("c").add_link("c", "s1", lat=1.0, bw=100.0)
+    spec.add_consumer("c", "STANDARD", topics=["t"], pollInterval=0.2)
+    spec.add_fault(5.0, "link_down", "b1", "s1", duration=12.0)
+    eng = Engine(spec, seed=3)
+    mon = eng.run(until=60.0)
+    assert eng.metrics()["elections"] >= 1, "failover must happen"
+    for p, pm in enumerate(eng.cluster.topics["t"].parts):
+        log = eng.cluster.logs[pm.leader].get(("t", p))
+        pts = list(log.batch.produce_time[:log.leo])
+        assert pts == sorted(pts), f"partition {p} reordered by retries"
+    per = {}
+    for m in sorted(mon.msgs.values(), key=lambda s: s.produce_time):
+        for c, t in m.deliveries.items():
+            per.setdefault((c, m.partition), []).append(t)
+    assert per and all(v == sorted(v) for v in per.values())

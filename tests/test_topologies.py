@@ -87,3 +87,52 @@ def test_from_topology_runs_a_pipeline():
     assert m["records_produced"] == 10
     assert m["records_delivered"] == 10
     assert m["lost_or_partial"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-tier geo_wan (core vs access links)
+# ---------------------------------------------------------------------------
+
+
+def test_geo_wan_tiered_deterministic():
+    kw = dict(core_frac=0.25, core_bw_mbps=8_000.0,
+              access_bw_range=(50.0, 150.0),
+              access_extra_lat_ms=(0.5, 2.0))
+    a = generate("geo_wan", 30, seed=7, **kw)
+    b = generate("geo_wan", 30, seed=7, **kw)
+    assert graphs_identical(a, b)
+    assert a.graph["core"] == b.graph["core"]
+    c = generate("geo_wan", 30, seed=8, **kw)
+    assert not graphs_identical(a, c)
+
+
+def test_geo_wan_tiers_draw_separate_bandwidth_and_latency():
+    import math
+    g = generate("geo_wan", 40, seed=3, core_frac=0.2,
+                 core_bw_mbps=8_000.0, access_bw_range=(50.0, 150.0),
+                 access_extra_lat_ms=(0.5, 2.0), km_per_ms=200.0)
+    core = set(g.graph["core"])
+    assert len(core) == 8                   # round(0.2 * 40)
+    pos = g.graph["pos"]
+    n_core_links = n_access = 0
+    for u, v, d in g.edges(data=True):
+        cfg = d["cfg"]
+        base = max(0.05, math.hypot(pos[u][0] - pos[v][0],
+                                    pos[u][1] - pos[v][1]) / 200.0)
+        if u in core and v in core:
+            n_core_links += 1
+            assert cfg.bw_mbps == 8_000.0           # provisioned backbone
+            assert cfg.lat_ms == pytest.approx(base)
+        else:
+            n_access += 1
+            assert 50.0 <= cfg.bw_mbps <= 150.0     # drawn access bw
+            assert base + 0.5 <= cfg.lat_ms <= base + 2.0
+    assert n_access > 0, "tiered graph must contain access links"
+
+
+def test_geo_wan_default_has_no_tiering_draws():
+    # core_frac=0 must reproduce the homogeneous legacy graph: fixed bw
+    # everywhere, latency purely from distance, no core set
+    g = generate("geo_wan", 25, seed=11)
+    assert g.graph["core"] == []
+    assert {d["cfg"].bw_mbps for _, _, d in g.edges(data=True)} == {1000.0}
