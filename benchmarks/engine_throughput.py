@@ -28,6 +28,14 @@ bit-identical, and reports ``produce_event_reduction`` — flushed
 produce batches at linger 0 over batches with lingering.  The record
 and batch counts are deterministic, so CI gates on the ratio.
 
+Since the event-time refactor a third scenario compares an **identity
+pipeline** (processing-time passthrough SPEs) against an **event-time
+windowed pipeline** (tumbling-window count aggregates over the same
+producer streams): watermark bookkeeping and pane firing happen inside
+the existing delivery events, so window firing must stay nearly free —
+CI gates ``window_event_overhead`` (windowed events / identity events)
+below 1.3x.
+
 Output contract (consumed by CI and tracked across PRs):
 ``BENCH_engine.json`` — see ``benchmarks/run.py`` for the schema.
 """
@@ -134,6 +142,91 @@ def run_linger(*, n_hosts: int, horizon: float, total_msgs: int) -> dict:
     return out
 
 
+N_SPE = 5
+
+
+def build_spe_pipeline(kind: str, *, n_hosts: int,
+                       rate_kbps: float = 8.0,
+                       total_msgs: int = 0) -> PipelineSpec:
+    """``N_SPE`` producer -> SPE -> sink chains on one switch.
+
+    ``kind="identity"``: processing-time passthrough (the baseline).
+    ``kind="windowed"``: event-time tumbling-window count aggregates
+    over the *same* producer streams (same rates, same record sets).
+    """
+    assert kind in ("identity", "windowed"), kind
+    spec = PipelineSpec(delivery="wakeup")
+    spec.add_switch("s1")
+    hosts = [f"h{i}" for i in range(1, n_hosts + 1)]
+    for h in hosts:
+        spec.add_host(h)
+        spec.add_link(h, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker(hosts[0])
+    for i in range(N_SPE):
+        spec.add_topic(f"in{i}", leader=hosts[0])
+        spec.add_topic(f"agg{i}", leader=hosts[0])
+    prod_hosts = hosts[1:1 + N_SPE]
+    spe_hosts = hosts[1 + N_SPE:1 + 2 * N_SPE]
+    sink_hosts = hosts[1 + 2 * N_SPE:1 + 3 * N_SPE]
+    assert len(spe_hosts) == N_SPE and len(sink_hosts) == N_SPE, \
+        "n_hosts too small for the SPE pipeline scenario"
+    for i in range(N_SPE):
+        cfg = dict(topics=[f"in{i}"], rateKbps=rate_kbps, msgSize=512,
+                   etJitterS=0.2)
+        if total_msgs:
+            cfg["totalMessages"] = total_msgs
+        spec.add_producer(prod_hosts[i], "SYNTHETIC", **cfg)
+        if kind == "windowed":
+            spec.add_spe(spe_hosts[i], query="identity",
+                         inTopic=f"in{i}", outTopic=f"agg{i}",
+                         timeMode="event", window=1.0, keyField="src",
+                         agg="count", pollInterval=0.1)
+        else:
+            spec.add_spe(spe_hosts[i], query="identity",
+                         inTopic=f"in{i}", outTopic=f"agg{i}",
+                         pollInterval=0.1)
+        spec.add_consumer(sink_hosts[i], "STANDARD", topics=[f"agg{i}"],
+                          pollInterval=0.1)
+    return spec
+
+
+def run_event_time(*, n_hosts: int, horizon: float) -> dict:
+    """Window-firing overhead: event-time windowed vs identity SPEs.
+
+    Both variants consume identical producer streams; the gate asserts
+    watermark bookkeeping + pane firing ride the existing delivery
+    events (< 1.3x the identity pipeline's event count).
+    """
+    out = {}
+    for kind in ("identity", "windowed"):
+        eng = Engine(build_spe_pipeline(kind, n_hosts=n_hosts), seed=0)
+        eng.run(until=horizon)
+        m = eng.metrics()
+        out[kind] = {
+            "engine_events": m["engine_events"],
+            "records_produced": m["records_produced"],
+            "records_delivered": m["records_delivered"],
+            "windows_fired": m["windows_fired"],
+            # producer-side stream only (SPE emissions excluded): the
+            # apples-to-apples equality check between the two variants
+            "in_produced": {k: v
+                            for k, v in m["partition_produced"].items()
+                            if k.startswith("in")},
+        }
+    assert out["windowed"]["windows_fired"] > 0, \
+        "event-time scenario fired no windows"
+    assert out["windowed"]["in_produced"] == \
+        out["identity"]["in_produced"], \
+        "variants must consume identical producer streams"
+    out["window_event_overhead"] = (
+        out["windowed"]["engine_events"]
+        / max(1, out["identity"]["engine_events"]))
+    assert out["window_event_overhead"] < 1.3, \
+        f"window firing cost {out['window_event_overhead']:.2f}x events " \
+        "vs the identity pipeline (gate: < 1.3x)"
+    return out
+
+
 def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
     n_hosts = 20 if smoke else 50
     horizon = 30.0 if smoke else 120.0
@@ -191,6 +284,15 @@ def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
         results["linger"]["produce_event_reduction"]
     emit("engine/linger", 0.0,
          f"produce_events={results['produce_event_reduction']:.1f}x")
+    # event-time axis: window firing must ride the delivery events
+    # (deterministic event counts; CI gates < 1.3x the identity chain)
+    results["event_time"] = run_event_time(
+        n_hosts=max(n_hosts, 1 + 3 * N_SPE), horizon=horizon)
+    results["window_event_overhead"] = \
+        results["event_time"]["window_event_overhead"]
+    emit("engine/event_time", 0.0,
+         f"window_overhead={results['window_event_overhead']:.2f}x;"
+         f"windows={results['event_time']['windowed']['windows_fired']}")
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
     return results
@@ -205,4 +307,5 @@ if __name__ == "__main__":
     res = run(smoke=args.smoke, out=args.out)
     print(json.dumps({k: v for k, v in res.items()
                       if k in ("speedup", "event_reduction",
-                               "produce_event_reduction")}, indent=2))
+                               "produce_event_reduction",
+                               "window_event_overhead")}, indent=2))

@@ -1,8 +1,8 @@
-"""CI sweep smoke: tiny 2x2x2 grid, 2 workers, resume + determinism gate.
+"""CI sweep smoke: tiny 2x2x2x2 grid, 2 workers, resume + determinism.
 
-Runs a 2x2x2 grid (topology size x delivery mode x topic partitions) on
-2 spawn workers, deletes part of the per-scenario cache, reruns, and
-asserts:
+Runs a 2x2x2x2 grid (topology size x delivery mode x topic partitions x
+windowed operator pipeline) on 2 spawn workers, deletes part of the
+per-scenario cache, reruns, and asserts:
 
 - the rerun reuses the surviving cache entries (resume);
 - the resumed aggregate equals the uninterrupted run's fingerprint —
@@ -10,9 +10,11 @@ asserts:
   clock is excluded from the fingerprint, as in the bench smoke).
 
 The ``partitions`` axis makes the gate cover the per-partition hash
-fields: partitioned metrics (per-partition record/byte tallies) enter
-the fingerprint, so any cross-process nondeterminism in the partitioned
-delivery path fails CI here.
+fields; the ``windowed`` axis adds an event-time tumbling-window SPE
+(checkpointing on) so the event-time metrics — ``windows_fired``,
+``late_records``, ``checkpoint_count``, ``recovered_duplicates`` —
+enter the fingerprint: any cross-process nondeterminism in watermark
+propagation or pane firing fails CI here.
 
 Exits non-zero on any gate failure; CI runs it on every PR.
 """
@@ -33,26 +35,31 @@ CACHE = ".ci_sweep"
 sweep = SweepSpec(
     name="ci_smoke",
     axes={"n_hosts": [8, 12], "delivery": ["poll", "wakeup"],
-          "partitions": [1, 2]},
+          "partitions": [1, 2], "windowed": [0, 1]},
     base={"topology": "star", "n_brokers": 1, "n_topics": 2,
           "n_producers": 2, "rate_kbps": 16.0, "horizon": 10.0,
-          "seed": 0})
+          "window_s": 1.0, "et_jitter_s": 0.5,
+          "checkpoint_interval": 2.0, "seed": 0})
 
 
 def main() -> None:
     shutil.rmtree(CACHE, ignore_errors=True)
     a = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
-    assert len(a) == 8 and a.n_cached == 0
-    for p in sorted(glob.glob(os.path.join(CACHE, "*.json")))[:3]:
+    assert len(a) == 16 and a.n_cached == 0
+    for p in sorted(glob.glob(os.path.join(CACHE, "*.json")))[:5]:
         os.remove(p)
     b = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
-    assert b.n_cached == 5, "resume must reuse the surviving cache"
+    assert b.n_cached == 11, "resume must reuse the surviving cache"
     assert a.fingerprint() == b.fingerprint(), \
         "resumed sweep diverged from the uninterrupted run"
     events = a.total("engine_events")
     assert events == b.total("engine_events") and events > 0
+    fired = sum(r["metrics"]["windows_fired"] for r in a.rows
+                if r["params"]["windowed"])
+    assert fired > 0, "windowed scenarios must actually fire windows"
     print(a.table())
-    print("aggregate engine events:", events)
+    print("aggregate engine events:", events,
+          "| windows fired:", fired)
 
 
 if __name__ == "__main__":

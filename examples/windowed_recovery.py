@@ -1,0 +1,100 @@
+"""Event-time windows + checkpointed recovery walkthrough.
+
+    PYTHONPATH=src python examples/windowed_recovery.py
+
+An out-of-order producer (event times backdated up to 300 ms) feeds a
+2-partition topic; a stream processor runs an event-time operator chain
+— KeyBy(src) -> TumblingWindow(1 s, 200 ms lateness) -> count — driven
+by per-partition watermarks, checkpointing its operator state + input
+offsets every 2 s.  Mid-window, the operator's host is killed for 3 s
+and recovers from the last checkpoint.
+
+The run is repeated under the three recovery configurations the sweep
+layer exposes as axes (``checkpoint_interval`` / ``spe_semantics``):
+
+- no checkpointing: a cold restart loses the panes buffered before the
+  kill — windowed record counts shrink (silent loss);
+- at_least_once: no loss, but windows fired after the last checkpoint
+  fire again on replay — ``recovered_duplicates`` counts them;
+- exactly_once: emissions are held until the checkpoint commits them
+  (a transactional sink), so the output topic sees every window
+  exactly once — identical to the fault-free reference.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Engine, PipelineSpec
+
+FAIL_AT, FAIL_LEN, HORIZON = 3.0, 3.0, 40.0
+
+
+def build(*, fault, checkpoint_s=0.0, semantics="at_least_once"):
+    spec = PipelineSpec()                 # wakeup delivery, zk mode
+    spec.add_switch("s1")
+    for host in ["kafka", "sensors", "windower", "dashboard"]:
+        spec.add_host(host)
+        spec.add_link(host, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker("kafka")
+    spec.add_topic("readings", leader="kafka", partitions=2)
+    spec.add_topic("per_second", leader="kafka")
+
+    # 60 readings, one every 100 ms, event times backdated <= 300 ms
+    # (round-robin over both partitions, so the watermark advances)
+    spec.add_producer("sensors", "SYNTHETIC", topics=["readings"],
+                      rateKbps=40.0, msgSize=500, totalMessages=60,
+                      etJitterS=0.3)
+
+    # the operator chain: KeyBy -> TumblingWindow -> count aggregate
+    spec.add_spe("windower", query="identity", inTopic="readings",
+                 outTopic="per_second", timeMode="event", window=1.0,
+                 allowedLateness=0.2, keyField="src", agg="count",
+                 checkpointInterval=checkpoint_s, semantics=semantics,
+                 pollInterval=0.1)
+    spec.add_consumer("dashboard", "METRICS", topic="per_second",
+                      pollInterval=0.1)
+    if fault:
+        spec.add_fault(FAIL_AT, "host_down", "windower",
+                       duration=FAIL_LEN)
+    return spec
+
+
+def run(**kw):
+    eng = Engine(build(**kw), seed=3)
+    eng.run(until=HORIZON)
+    sink = [rt for rt in eng.runtimes
+            if rt.name.startswith("consumer")][0]
+    return eng.metrics(), sink.payloads
+
+
+ref_m, ref_windows = run(fault=False)
+print(f"fault-free reference: {ref_m['windows_fired']} windows fired, "
+      f"{sum(w['n'] for w in ref_windows)} records counted, "
+      f"{ref_m['late_records']} late")
+
+CKPT_S = 2.0          # long enough that a window fires *between* two
+                      # checkpoints — the at-least-once duplicate case
+
+for label, kw in [
+    ("no checkpointing  ", dict(checkpoint_s=0.0)),
+    ("at_least_once     ", dict(checkpoint_s=CKPT_S,
+                                semantics="at_least_once")),
+    ("exactly_once      ", dict(checkpoint_s=CKPT_S,
+                                semantics="exactly_once")),
+]:
+    m, windows = run(fault=True, **kw)
+    counted = sum(w["n"] for w in windows)
+    print(f"{label} emits={m['window_emits']:2d} "
+          f"distinct={m['windows_emitted_distinct']:2d} "
+          f"duplicates={m['recovered_duplicates']} "
+          f"checkpoints={m['checkpoint_count']:2d} "
+          f"recoveries={m['spe_recoveries']} "
+          f"records_counted={counted}")
+
+# the exactly-once run reproduces the reference bit-for-bit
+m, windows = run(fault=True, checkpoint_s=CKPT_S,
+                 semantics="exactly_once")
+assert windows == ref_windows
+assert m["recovered_duplicates"] == 0
+print("exactly_once output == fault-free reference: True")

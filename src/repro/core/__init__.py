@@ -13,10 +13,21 @@ from repro.core.netem import Network, LinkCfg, one_big_switch, star
 from repro.core.engine import Engine, EventHandle
 from repro.core.broker import RecordBatch
 from repro.core.monitor import Monitor
+from repro.core.operators import (
+    Element, Filter, FlatMap, KeyBy, Map, OperatorChain, Sink,
+    SlidingWindow, StatefulMap, TumblingWindow, WindowAggregate,
+)
+from repro.core.state import (
+    FileStateBackend, MemoryStateBackend, StateBackend,
+)
 
 __all__ = [
     "PipelineSpec", "Component", "TopicCfg", "FaultCfg", "HostSpec",
     "from_graphml", "Network", "LinkCfg", "one_big_switch", "star",
     "Engine", "EventHandle", "RecordBatch", "Monitor",
     "PRODUCER", "CONSUMER", "BROKER", "SPE", "STORE",
+    "Element", "Filter", "FlatMap", "KeyBy", "Map", "OperatorChain",
+    "Sink", "SlidingWindow", "StatefulMap", "TumblingWindow",
+    "WindowAggregate", "StateBackend", "MemoryStateBackend",
+    "FileStateBackend",
 ]

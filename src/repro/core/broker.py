@@ -65,6 +65,19 @@ register as **waiters**; the cluster wakes waiters when any partition's
 high watermark advances (and after elections / leadership changes /
 group rebalances, so a waiter pointed at a deposed leader or a stale
 assignment re-resolves instead of hanging).
+
+**Fetch-side batching.**  Symmetric to the produce batcher:
+``fetch_min_bytes`` / ``fetch_max_wait_s`` broker cfg lets consumers
+linger — a fetch finding fewer than ``fetch_min_bytes`` committed bytes
+across its owned partitions is held until enough data accumulates or
+the wait expires (one scheduled expiry event per hold cycle).  At the
+defaults (``min_bytes=1`` / ``max_wait=0``) the hold branch is never
+taken and the event stream is bit-identical to the pre-feature broker.
+
+**Event time.**  Records carry a producer-stamped ``event_time``
+(defaulting to produce time) in a dedicated numpy column; the SPE layer
+derives per-partition watermarks from this column for event-time window
+semantics (``core/spe.py``).
 """
 from __future__ import annotations
 
@@ -85,6 +98,14 @@ DEFAULTS = dict(
     delivery_timeout=120.0,     # Kafka default delivery.timeout.ms
     rebalance_interval=5.0,     # preferred-replica election check
     fetch_bytes=1 << 20,
+    # fetch-side batching (Kafka fetch.min.bytes / fetch.max.wait.ms):
+    # with min_bytes > 1 and max_wait > 0 a response holding fewer than
+    # min_bytes committed bytes is *held* until enough data accumulates
+    # or the wait expires.  The defaults disable lingering and are
+    # event-stream-identical to the pre-feature broker (pinned in
+    # tests/test_fetch_batching.py).
+    fetch_min_bytes=1,
+    fetch_max_wait_s=0.0,
 )
 
 # fetch() outcomes (used by the wakeup delivery loop to decide re-arming)
@@ -111,6 +132,10 @@ class Record:
     epoch: int = 0
     partition: int = 0
     key: Any = None
+    # event-time semantics: the timestamp the *producer* stamped into
+    # the record (defaults to produce time).  Consumers derive their
+    # watermarks from this column, never from arrival times.
+    event_time: float = 0.0
 
 
 class RecordBatch:
@@ -121,7 +146,7 @@ class RecordBatch:
     """
 
     __slots__ = ("n", "msg_id", "size", "produce_time", "epoch",
-                 "cum_size", "payloads", "producers", "keys")
+                 "event_time", "cum_size", "payloads", "producers", "keys")
 
     _MIN_CAP = 64
 
@@ -131,16 +156,20 @@ class RecordBatch:
         self.size = np.empty(self._MIN_CAP, np.int64)
         self.produce_time = np.empty(self._MIN_CAP, np.float64)
         self.epoch = np.empty(self._MIN_CAP, np.int64)
+        self.event_time = np.empty(self._MIN_CAP, np.float64)
         self.cum_size = np.empty(self._MIN_CAP, np.int64)
         self.payloads: list[Any] = []
         self.producers: list[str] = []
         self.keys: list[Any] = []
 
+    _COLS = ("msg_id", "size", "produce_time", "epoch", "event_time",
+             "cum_size")
+
     # -- growth --------------------------------------------------------
 
     def _grow(self, min_cap: int = 0) -> None:
         cap = max(self._MIN_CAP, 2 * len(self.msg_id), min_cap)
-        for name in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
+        for name in self._COLS:
             col = getattr(self, name)
             new = np.empty(cap, col.dtype)
             new[:self.n] = col[:self.n]
@@ -148,7 +177,8 @@ class RecordBatch:
 
     def append_row(self, msg_id: int, size: int, produce_time: float,
                    epoch: int, payload: Any, producer: str,
-                   key: Any = None) -> int:
+                   key: Any = None, event_time: Optional[float] = None
+                   ) -> int:
         """Append one record; returns its offset."""
         i = self.n
         if i >= len(self.msg_id):
@@ -157,6 +187,8 @@ class RecordBatch:
         self.size[i] = size
         self.produce_time[i] = produce_time
         self.epoch[i] = epoch
+        self.event_time[i] = (produce_time if event_time is None
+                              else event_time)
         self.cum_size[i] = size + (self.cum_size[i - 1] if i else 0)
         self.payloads.append(payload)
         self.producers.append(producer)
@@ -166,7 +198,8 @@ class RecordBatch:
 
     def extend_rows(self, msg_ids, sizes, produce_times, epochs,
                     payloads: list, producers: list,
-                    keys: Optional[list] = None) -> int:
+                    keys: Optional[list] = None,
+                    event_times: Optional[list] = None) -> int:
         """Vectorized multi-row append; returns the first offset.
 
         Column arguments are sequences of equal length ``k``; the prefix
@@ -183,6 +216,8 @@ class RecordBatch:
         self.size[i:i + k] = sizes
         self.produce_time[i:i + k] = produce_times
         self.epoch[i:i + k] = epochs
+        self.event_time[i:i + k] = (produce_times if event_times is None
+                                    else event_times)
         base = int(self.cum_size[i - 1]) if i else 0
         self.cum_size[i:i + k] = base + np.cumsum(
             np.asarray(sizes, np.int64))
@@ -222,7 +257,7 @@ class RecordBatch:
     def copy_from(self, other: "RecordBatch") -> None:
         """Become an exact copy of ``other`` (payload objects shared)."""
         self.n = other.n
-        for name in ("msg_id", "size", "produce_time", "epoch", "cum_size"):
+        for name in self._COLS:
             setattr(self, name, getattr(other, name)[:other.n].copy())
         self.payloads = list(other.payloads)
         self.producers = list(other.producers)
@@ -239,7 +274,8 @@ class RecordBatch:
         return Record(int(self.msg_id[i]), topic, self.payloads[i],
                       int(self.size[i]), float(self.produce_time[i]),
                       self.producers[i], offset=i, epoch=int(self.epoch[i]),
-                      partition=partition, key=self.keys[i])
+                      partition=partition, key=self.keys[i],
+                      event_time=float(self.event_time[i]))
 
     def records_slice(self, topic: str, lo: int, hi: int,
                       partition: int = 0) -> list[Record]:
@@ -398,7 +434,7 @@ class ReplicaLog:
     def append(self, rec: Record) -> Record:
         off = self.batch.append_row(rec.msg_id, rec.size, rec.produce_time,
                                     rec.epoch, rec.payload, rec.producer,
-                                    rec.key)
+                                    rec.key, event_time=rec.event_time)
         return dataclasses.replace(rec, offset=off)
 
     def append_batch(self, records: list[Record],
@@ -411,7 +447,8 @@ class ReplicaLog:
             [r.msg_id for r in records], [r.size for r in records],
             [r.produce_time for r in records], epochs,
             [r.payload for r in records], [r.producer for r in records],
-            [r.key for r in records])
+            [r.key for r in records],
+            [r.event_time for r in records])
         return [dataclasses.replace(r, offset=first + j, epoch=epochs[j])
                 for j, r in enumerate(records)]
 
@@ -468,6 +505,14 @@ class Cluster:
         self._belief: dict[tuple[str, str, int], tuple[bool, int]] = {}
         # wakeup delivery: topic -> {consumer_name: consumer runtime}
         self._waiters: dict[str, dict[str, Any]] = {}
+        # fetch-side batching: (topic, consumer) -> deadline of the
+        # current below-min-bytes hold (see fetch()).  The *deadline* is
+        # stored, not the hold start: the expiry event lands at exactly
+        # `now + max_wait` (the same float expression), so the
+        # comparison at expiry is exact — re-deriving it as
+        # `now - held < max_wait` loses to rounding about a third of
+        # the time and would re-park the waiter with no timer left.
+        self._hold_deadline: dict[tuple[str, str], float] = {}
 
     def _log(self, broker: str, topic: str, partition: int = 0
              ) -> ReplicaLog:
@@ -578,6 +623,13 @@ class Cluster:
                          group: str) -> int:
         return self._consumer_offsets.get((topic, partition, group), 0)
 
+    def seek(self, topic: str, partition: int, group: str,
+             offset: int) -> None:
+        """Rewind (or advance) a group's committed offset — the recovery
+        path: a restored SPE resumes from its checkpointed input offsets
+        and the records past them are re-fetched (at-least-once)."""
+        self._consumer_offsets[(topic, partition, group)] = int(offset)
+
     # ------------------------------------------------------------------
     # Wakeup delivery (event-driven subscribers)
     # ------------------------------------------------------------------
@@ -640,7 +692,8 @@ class Cluster:
 
     def produce(self, producer_host: str, producer_name: str, topic: str,
                 payload: Any, size: int, *, key: Any = None,
-                linger_s: float = 0.0, batch_bytes: int = 1 << 14) -> int:
+                linger_s: float = 0.0, batch_bytes: int = 1 << 14,
+                event_time: Optional[float] = None) -> int:
         """Producer API.  Returns msg_id; delivery is asynchronous.
 
         ``key`` selects the partition (``crc32(key) % partitions``;
@@ -648,11 +701,14 @@ class Cluster:
         per (producer, topic, partition) and flushes the batch on the
         linger timeout or when ``batch_bytes`` is reached; ``linger_s ==
         0`` flushes a single-record batch immediately (legacy behavior).
+        ``event_time`` is the producer-stamped event timestamp carried in
+        the log's event-time column (default: produce time).
         """
         now = self.engine.now
         part = self._route(producer_name, topic, key)
         rec = Record(self.next_msg_id(), topic, payload, size, now,
-                     producer_name, partition=part, key=key)
+                     producer_name, partition=part, key=key,
+                     event_time=now if event_time is None else event_time)
         self.engine.monitor.produced(rec)
         if linger_s <= 0.0:
             self._start_batch([rec], producer_host)
@@ -857,6 +913,28 @@ class Cluster:
         """
         eng = self.engine
         rng = eng.client_rng(consumer.name)
+        # fetch.min.bytes lingering: with fewer than fetch_min_bytes
+        # committed bytes available the response is *held* — the
+        # subscriber parks as a waiter (wakeup) or keeps polling (poll)
+        # and a one-shot expiry event forces delivery after
+        # fetch_max_wait_s.  Disabled at the defaults (min_bytes=1 or
+        # max_wait=0): this branch is never entered, so the event stream
+        # is bit-identical to the pre-feature broker.
+        min_b = self.cfg["fetch_min_bytes"]
+        max_w = self.cfg["fetch_max_wait_s"]
+        if min_b > 1 and max_w > 0:
+            hkey = (topic, consumer.name)
+            avail = self._avail_bytes(consumer, topic)
+            if 0 < avail < min_b:
+                deadline = self._hold_deadline.get(hkey)
+                if deadline is None:
+                    self._hold_deadline[hkey] = eng.now + max_w
+                    eng.schedule(max_w,
+                                 lambda: self._expire_hold(hkey))
+                    return FETCH_EMPTY
+                if eng.now < deadline:
+                    return FETCH_EMPTY
+            self._hold_deadline.pop(hkey, None)
         any_more = any_blocked = any_delivered = False
         for p in self.assigned_partitions(consumer, topic):
             st = self._fetch_partition(consumer, topic, p, rng)
@@ -871,6 +949,34 @@ class Cluster:
         if any_blocked:
             return FETCH_BLOCKED
         return FETCH_DELIVERED if any_delivered else FETCH_EMPTY
+
+    def _avail_bytes(self, consumer, topic: str) -> int:
+        """Committed bytes past the group's offsets over owned partitions
+        (broker-side view; drives the fetch.min.bytes hold decision)."""
+        owner = self.group_of(consumer)
+        total = 0
+        for p in self.assigned_partitions(consumer, topic):
+            pm = self.topics[topic].parts[p]
+            log = self.logs[pm.leader].get((topic, p))
+            if log is None:
+                continue
+            off = self._consumer_offsets.get((topic, p, owner), 0)
+            if off < log.hw:
+                total += log.batch.bytes_between(off, log.hw)
+        return total
+
+    def _expire_hold(self, hkey: tuple[str, str]) -> None:
+        """fetch.max.wait expiry: wake the held subscriber if it is
+        parked (wakeup mode); polling subscribers re-check on their own
+        cadence and deliver once the deadline has passed."""
+        if hkey not in self._hold_deadline:
+            return                    # delivered (or drained) meanwhile
+        topic, cname = hkey
+        waiting = self._waiters.get(topic)
+        c = waiting.pop(cname, None) if waiting else None
+        if c is not None:
+            eng = self.engine
+            eng.schedule(0.0, lambda: c.on_wakeup(eng, topic))
 
     def _fetch_partition(self, consumer, topic: str, part: int,
                          rng) -> str:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.broker import Cluster
 from repro.core.monitor import Monitor
+from repro.core.state import MemoryStateBackend
 from repro.core.spec import (
     BROKER, CONSUMER, PRODUCER, SPE, STORE, PipelineSpec,
 )
@@ -98,6 +99,10 @@ class Engine:
         self._client_rngs: dict[str, random.Random] = {}
         self.delivery_mode = getattr(spec, "delivery", "wakeup")
         self.monitor = monitor or Monitor()
+        # durable checkpoint store (the job-manager role): survives
+        # emulated host failures; SPE runtimes snapshot into it and
+        # restore from it on recovery (see core/spe.py + core/state.py)
+        self.state_backend = MemoryStateBackend()
         self.now = 0.0
         self._q: list = []
         self._seq = 0
@@ -172,6 +177,21 @@ class Engine:
 
     def schedule_at(self, t: float, fn: Callable[[], None]) -> EventHandle:
         return self.schedule(t - self.now, fn)
+
+    def host_transition(self, host: str, up: bool) -> None:
+        """Fault hook: notify a failed/recovered host's runtimes.
+
+        Runtimes implementing ``on_host_down``/``on_host_up`` (SPE
+        operator runtimes: volatile-state wipe / checkpoint restore) are
+        called in runtimes-list order — deterministic across processes.
+        """
+        attr = "on_host_up" if up else "on_host_down"
+        for rt in self.runtimes:
+            if getattr(rt, "host", None) != host:
+                continue
+            hook = getattr(rt, attr, None)
+            if hook is not None:
+                hook(self)
 
     def stop(self) -> None:
         self._stopped = True
@@ -271,6 +291,13 @@ class Engine:
             group_lag[f"{gname}:{topic}"] = lag
         e2e = mon.e2e_latency()
         util = self.resource_report()
+        # event-time / checkpoint accounting (operator-graph SPEs):
+        # window_emit events carry the emission identity (spe, key,
+        # window), so duplicates re-emitted after a recovery are the
+        # emission count minus the distinct identity count
+        emits = mon.events_of("window_emit")
+        distinct_windows = {(e["spe"], e["key"], e["start"], e["end"])
+                            for e in emits}
         return {
             "sim_s": self.now,
             "wall_s": wall_s,
@@ -298,6 +325,14 @@ class Engine:
                              if gs.explicit}),
             "group_rebalances": len(mon.events_of("group_rebalance")),
             "produce_batches": cluster.n_produce_batches,
+            "windows_fired": len(mon.events_of("window_fired")),
+            "window_emits": len(emits),
+            "windows_emitted_distinct": len(distinct_windows),
+            "recovered_duplicates": len(emits) - len(distinct_windows),
+            "late_records": sum(e["n"]
+                                for e in mon.events_of("late_records")),
+            "checkpoint_count": len(mon.events_of("checkpoint")),
+            "spe_recoveries": len(mon.events_of("spe_recovered")),
             "partition_produced": part_produced,
             "partition_delivered": part_delivered,
             "partition_bytes": part_bytes,

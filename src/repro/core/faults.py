@@ -28,6 +28,10 @@ def _apply(engine, f: FaultCfg) -> None:
         (h,) = f.target
         net.set_host_up(h, False)
         mon.event(t, "host_down", host=h)
+        # volatile runtime state dies with the host (SPE operator state,
+        # uncommitted outputs); checkpoints live in the engine's durable
+        # state backend and survive
+        engine.host_transition(h, up=False)
         if f.duration:
             engine.schedule(f.duration, lambda: _heal_host(engine, h))
     elif f.kind == "gray_loss":
@@ -53,3 +57,6 @@ def _heal_link(engine, a: str, b: str) -> None:
 def _heal_host(engine, h: str) -> None:
     engine.net.set_host_up(h, True)
     engine.monitor.event(engine.now, "host_up", host=h)
+    # recovery: runtimes restore their latest checkpoint (if any) and
+    # seek their input offsets back to the checkpointed positions
+    engine.host_transition(h, up=True)

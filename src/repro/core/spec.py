@@ -12,6 +12,23 @@ graph:  topicCfg, faultCfg
 node:   prodType/prodCfg, consType/consCfg, streamProcType/streamProcCfg,
         storeType/storeCfg, brokerCfg, cpuPercentage
 link:   lat (ms), bw (Mbps), loss (%), st, dt (ports)
+
+Stream-processor (``streamProcCfg``) knobs for the operator-graph SPE
+(validated here, consumed by ``core/spe.py``):
+
+timeMode            "processing" (legacy, default) | "event" (watermarks)
+window              window size, seconds (0 = unwindowed)
+windowSlide         sliding-window slide, seconds (0 = tumbling)
+allowedLateness     event-time lateness bound, seconds
+checkpointInterval  operator-state checkpoint cadence, seconds (0 = off)
+semantics           "at_least_once" (default) | "exactly_once"
+keyField / agg / valueField
+                    event-time windowing: key extractor field, aggregate
+                    name (count|sum|mean), numeric value field
+
+Broker (``brokerCfg``) additions: ``fetch_min_bytes`` /
+``fetch_max_wait_s`` — consumer-side fetch lingering, symmetric to the
+producer's ``lingerMs``/``batchBytes`` (defaults disable it).
 """
 from __future__ import annotations
 
@@ -218,6 +235,41 @@ class PipelineSpec:
                 problems.append(
                     f"topic {t.name}: partitions must be >= 1, "
                     f"got {t.partitions}")
+        for c in self.components(SPE):
+            tm = c.get("timeMode", "processing")
+            if tm not in ("processing", "event"):
+                problems.append(
+                    f"spe {c.name}: timeMode must be 'processing' or "
+                    f"'event', got {tm!r}")
+            sem = c.get("semantics", "at_least_once")
+            if sem not in ("at_least_once", "exactly_once"):
+                problems.append(
+                    f"spe {c.name}: semantics must be 'at_least_once' "
+                    f"or 'exactly_once', got {sem!r}")
+            for knob in ("window", "windowSlide", "allowedLateness",
+                         "checkpointInterval"):
+                v = float(c.get(knob, 0.0))
+                if v < 0:
+                    problems.append(
+                        f"spe {c.name}: {knob} must be >= 0, got {v}")
+            slide = float(c.get("windowSlide", 0.0))
+            if slide > 0 and slide > float(c.get("window", 0.0)):
+                problems.append(
+                    f"spe {c.name}: windowSlide {slide} exceeds the "
+                    f"window size {c.get('window')}")
+            if sem == "exactly_once" \
+                    and float(c.get("checkpointInterval", 0.0)) <= 0:
+                problems.append(
+                    f"spe {c.name}: exactly_once needs "
+                    f"checkpointInterval > 0 (the commit cadence)")
+            if sem == "exactly_once" and tm != "event":
+                # the transactional output hold lives on the event-time
+                # path only; silently emitting-then-replaying under a
+                # config that promises exactly-once would be a lie
+                problems.append(
+                    f"spe {c.name}: exactly_once requires "
+                    f"timeMode='event' (processing-time emissions are "
+                    f"not held for the checkpoint commit)")
         for f in self.faults:
             if f.kind == "link_down" and len(f.target) != 2:
                 problems.append(f"fault {f}: link_down needs (a, b)")

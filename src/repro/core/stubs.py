@@ -46,6 +46,14 @@ class ProducerBase:
         # nKeys > 0: cycle a deterministic key space (no RNG draw, so
         # keyed runs stay bit-comparable with unkeyed ones elsewhere)
         self.n_keys = int(comp.get("nKeys", 0))
+        # event-time stamping: etJitterS > 0 backdates each record's
+        # event_time by uniform(0, etJitterS) seconds — the out-of-order
+        # arrival model that exercises late-record handling downstream.
+        # Draws come from a dedicated RNG stream, so enabling jitter
+        # never perturbs the producer's schedule stream (and 0 draws
+        # nothing: runs without jitter stay bit-identical).
+        self.et_jitter_s = float(comp.get("etJitterS", 0.0))
+        self._et_rng = None
 
     def start(self, eng) -> None:
         # own deterministic stream: producer schedules are independent of
@@ -60,16 +68,23 @@ class ProducerBase:
     def produce(self, eng, payload: Any, size: int,
                 topic: Optional[str] = None,
                 unit: Optional[Any] = None,
-                key: Optional[Any] = None) -> None:
+                key: Optional[Any] = None,
+                event_time: Optional[float] = None) -> None:
         if unit is not None:
             eng.monitor.event(eng.now, "unit_in", unit=unit)
             payload = {"unit": unit, "data": payload}
         if key is None and self.n_keys:
             key = f"{self.name}/k{self.sent % self.n_keys}"
+        if event_time is None and self.et_jitter_s > 0:
+            if self._et_rng is None:
+                self._et_rng = eng.client_rng(f"{self.name}/et")
+            event_time = max(
+                0.0, eng.now - self._et_rng.uniform(0, self.et_jitter_s))
         eng.cluster.produce(self.host, self.name, topic or self.topic,
                             payload, size, key=key,
                             linger_s=self.linger_s,
-                            batch_bytes=self.batch_bytes)
+                            batch_bytes=self.batch_bytes,
+                            event_time=event_time)
         self.sent += 1
 
 
@@ -209,26 +224,17 @@ class TokensProducer(ProducerBase):
 
 class ConsumerBase(DeliveryLoop):
     def __init__(self, comp: Component, host: str):
-        self.comp = comp
-        self.host = host
-        self.name = comp.name
         t = comp.get("topics") or comp.get("topic") or comp.get("topicName")
-        self.topics = [t] if isinstance(t, str) else list(t or [])
-        # consumer group: members sharing a group split partitions and
-        # share committed offsets; None = implicit solo group
-        self.group = comp.get("group")
-        self.poll_interval = float(comp.get("pollInterval", 0.1))
+        # shared subscriber surface (name/group/poll cadence/busy gate)
+        # lives on DeliveryLoop — see core/subscription.py
+        self.init_subscriber(
+            comp, host, [t] if isinstance(t, str) else list(t or []))
         self.per_record_cost = float(comp.get("perRecordCost", 0.0))
         self.n_received = 0
         self.bytes_received = 0
-        self.busy_until = 0.0      # Kafka poll loop: fetch after processing
 
     def start(self, eng) -> None:
         self.start_delivery(eng, self.topics)
-
-    def _busy_horizon(self, eng) -> float:
-        # synchronous poll loop: don't fetch while processing is backlogged
-        return self.busy_until
 
     def on_records(self, eng, records) -> None:
         nbytes = sum(r.size for r in records)

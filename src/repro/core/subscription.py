@@ -40,9 +40,30 @@ from repro.core.broker import (
 class DeliveryLoop:
     """Mixin driving Cluster.fetch for a subscriber runtime.
 
-    Requires from the host class: ``name``, ``host``, ``poll_interval``,
-    and ``on_records(eng, records)``.
+    :meth:`init_subscriber` installs the shared subscriber surface —
+    ``name`` / ``host`` / ``group`` / ``poll_interval`` / ``busy_until``
+    — used by both consumer stubs and SPE runtimes (hoisted here so a
+    new runtime kind never re-implements the delivery plumbing); the
+    host class provides ``on_records(eng, records)``.
+
+    The busy gate mirrors Kafka's synchronous poll loop: a subscriber
+    that sets ``busy_until`` past *now* (consumers do after each
+    processed batch; SPE runtimes deliberately do not — their service
+    time is modeled on the host compute queue instead) defers its next
+    fetch until processing completes.
     """
+
+    def init_subscriber(self, comp, host: str, topics) -> None:
+        """Shared subscriber state (consumer stubs + SPE runtimes)."""
+        self.comp = comp
+        self.host = host
+        self.name = comp.name
+        self.topics = list(topics)
+        # consumer group: members sharing a group split partitions and
+        # share committed offsets; None = implicit solo group
+        self.group = comp.get("group")
+        self.poll_interval = float(comp.get("pollInterval", 0.1))
+        self.busy_until = 0.0
 
     def start_delivery(self, eng, topics) -> None:
         topics = list(topics)
@@ -60,7 +81,7 @@ class DeliveryLoop:
 
     def _busy_horizon(self, eng) -> float:
         """Time until which fetches must be deferred (0 = never busy)."""
-        return 0.0
+        return getattr(self, "busy_until", 0.0)
 
     # -- legacy polling -------------------------------------------------
 

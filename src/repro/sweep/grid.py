@@ -15,10 +15,14 @@ code — after editing builder or engine internals, clear the cache dir
 Axes are plain param names resolved by the builder — the default
 :func:`~repro.sweep.scenarios.build_scenario` understands the partition
 family (``partitions``, ``consumer_groups``, ``linger_ms``, ``n_keys``)
-alongside the earlier topology/broker/fault knobs, and every axis value
-(partitions included) is part of the scenario content hash, so the
-resume cache and the cross-process fingerprint contract extend to the
-partitioned grids unchanged.
+and the event-time/operator family (``windowed``, ``window_s``,
+``time_mode``, ``allowed_lateness``, ``checkpoint_interval``,
+``spe_semantics``, ``et_jitter_s``, ``fault="spe_down"``) alongside the
+earlier topology/broker/fault knobs, and every axis value is part of
+the scenario content hash, so the resume cache and the cross-process
+fingerprint contract extend to the windowed grids unchanged — the new
+``late_records`` / ``windows_fired`` / ``checkpoint_count`` /
+``recovered_duplicates`` metrics are deterministic and fingerprinted.
 
 Builders must be importable module-level functions (the parallel runner
 ships them to spawn-based worker processes by reference).  The optional

@@ -28,15 +28,31 @@ poll_interval               subscriber cadence (also the wakeup fallback)
 delivery / mode             "wakeup"|"poll", "zk"|"kraft"
 broker_cfg    dict merged into every broker component (Table I brokerCfg)
 loss_pct      uniform extra loss applied to every link
-fault         none | partition | broker_down | gray_loss, shaped by
-              fault_at / fault_duration / fault_loss_pct
 reach_cache   per-epoch reachability memoization toggle (default on;
               the scale benchmark's before/after axis)
+windowed / window_s
+              truthy ``windowed`` (or ``window_s > 0``) places one
+              stream processor on the last host: topics[0] -> "agg",
+              keyed by producer (``keyField="src"``), with the
+              operator-graph knobs below (event-time by default)
+time_mode / allowed_lateness / window_slide_s / spe_agg
+              SPE operator knobs (core/spe.py): "event"|"processing",
+              lateness bound (s), sliding-window slide (s, 0=tumbling),
+              aggregate name (count|sum|mean)
+checkpoint_interval / spe_semantics
+              checkpointed recovery: snapshot cadence (s, 0=off) and
+              "at_least_once"|"exactly_once" emission semantics
+et_jitter_s   producers backdate event_time by uniform(0, jitter) —
+              the out-of-order model feeding late-record handling
+fault         none | partition | broker_down | gray_loss | spe_down,
+              shaped by fault_at / fault_duration / fault_loss_pct
+              (spe_down kills the stream processor's host — the
+              recovery axis; requires a windowed SPE)
 seed / horizon              consumed by the sweep runner, not here
 """
 from __future__ import annotations
 
-from repro.core.spec import PipelineSpec
+from repro.core.spec import SPE, PipelineSpec
 from repro.sweep import topologies
 
 
@@ -75,7 +91,8 @@ def build_scenario(p: dict) -> PipelineSpec:
                           msgSize=int(p.get("msg_size", 512)),
                           lingerMs=float(p.get("linger_ms", 0.0)),
                           batchBytes=int(p.get("batch_bytes", 1 << 14)),
-                          nKeys=int(p.get("n_keys", 0)))
+                          nKeys=int(p.get("n_keys", 0)),
+                          etJitterS=float(p.get("et_jitter_s", 0.0)))
     consumers = rest[n_prod:]
     if "n_consumers" in p:
         consumers = consumers[:int(p["n_consumers"])]
@@ -87,6 +104,24 @@ def build_scenario(p: dict) -> PipelineSpec:
         if n_groups > 0:
             cfg["group"] = f"g{i % n_groups}"
         spec.add_consumer(h, "STANDARD", **cfg)
+    windowed = p.get("windowed")
+    if windowed is None:                 # explicit 0 wins over window_s
+        windowed = float(p.get("window_s", 0.0)) > 0
+    if windowed:
+        # one operator-graph stream processor on the last host:
+        # topics[0] -> "agg", keyed by producing component
+        spec.add_topic("agg", leader=brokers[0])
+        spec.add_spe(
+            hosts[-1], query="identity", inTopic=topics[0],
+            outTopic="agg",
+            timeMode=p.get("time_mode", "event"),
+            window=float(p.get("window_s", 1.0)),
+            windowSlide=float(p.get("window_slide_s", 0.0)),
+            allowedLateness=float(p.get("allowed_lateness", 0.0)),
+            checkpointInterval=float(p.get("checkpoint_interval", 0.0)),
+            semantics=p.get("spe_semantics", "at_least_once"),
+            keyField="src", agg=p.get("spe_agg", "count"),
+            pollInterval=float(p.get("poll_interval", 0.1)))
     _install_fault(spec, p, brokers)
     return spec
 
@@ -107,5 +142,11 @@ def _install_fault(spec: PipelineSpec, p: dict, brokers: list[str]) -> None:
     elif fault == "gray_loss":
         spec.add_fault(at, "gray_loss", b0, nbr, duration=dur,
                        loss_pct=float(p.get("fault_loss_pct", 30.0)))
+    elif fault == "spe_down":
+        spe_hosts = [h.name for h in spec.hosts.values() if h.by_role(SPE)]
+        if not spe_hosts:
+            raise ValueError("fault 'spe_down' needs a windowed SPE "
+                             "(set windowed=1 or window_s > 0)")
+        spec.add_fault(at, "host_down", spe_hosts[0], duration=dur)
     else:
         raise ValueError(f"unknown fault pattern {fault!r}")

@@ -1,0 +1,135 @@
+"""Event-time semantics at the engine level: watermark-driven window
+firing must be deterministic across delivery modes and across
+processes, late records must be classified per-partition (mode-
+independent), and the new metrics fields must enter the sweep
+fingerprint deterministically.
+"""
+import pytest
+
+from repro.core import Engine, PipelineSpec
+from repro.sweep import SweepSpec, run_sweep
+
+HORIZON = 30.0
+
+
+def windowed_spec(delivery, *, partitions=2, n_keys=0, et_jitter=0.3,
+                  lateness=0.2, window=1.0, slide=0.0,
+                  time_mode="event"):
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    for h in ["b", "p1", "w", "c"]:
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker("b")
+    spec.add_topic("in", leader="b", partitions=partitions)
+    spec.add_topic("agg", leader="b")
+    spec.add_producer("p1", "SYNTHETIC", topics=["in"], rateKbps=40.0,
+                      msgSize=500, totalMessages=60, nKeys=n_keys,
+                      etJitterS=et_jitter)
+    spec.add_spe("w", query="identity", inTopic="in", outTopic="agg",
+                 timeMode=time_mode, window=window, windowSlide=slide,
+                 allowedLateness=lateness, keyField="src", agg="count",
+                 pollInterval=0.1)
+    spec.add_consumer("c", "METRICS", topic="agg", pollInterval=0.1)
+    return spec
+
+
+def run_windowed(delivery, seed=3, **kw):
+    eng = Engine(windowed_spec(delivery, **kw), seed=seed)
+    eng.run(until=HORIZON)
+    sink = [rt for rt in eng.runtimes if rt.name.startswith("consumer")][0]
+    return eng, sink
+
+
+def test_event_time_windows_fire_and_cover_all_records():
+    eng, sink = run_windowed("wakeup")
+    m = eng.metrics()
+    assert m["windows_fired"] > 0
+    assert m["windows_fired"] == m["window_emits"] == len(sink.payloads)
+    assert m["recovered_duplicates"] == 0
+    # tumbling count windows partition the on-time records exactly
+    assert sum(p["n"] for p in sink.payloads) + m["late_records"] <= 60
+    for p in sink.payloads:
+        assert p["window"][1] - p["window"][0] == 1.0
+        assert p["value"] == float(p["n"])
+
+
+def test_window_outputs_identical_across_delivery_modes():
+    _, sink_p = run_windowed("poll")
+    _, sink_w = run_windowed("wakeup")
+    assert sink_p.payloads, "windows must actually fire"
+    assert sink_p.payloads == sink_w.payloads
+
+
+def test_late_records_deterministic_across_modes():
+    # jitter far beyond the producer interval + zero lateness: late
+    # records must appear, classified per-partition (mode-independent)
+    kw = dict(et_jitter=1.0, lateness=0.0, partitions=1)
+    eng_p, sink_p = run_windowed("poll", **kw)
+    eng_w, sink_w = run_windowed("wakeup", **kw)
+    mp, mw = eng_p.metrics(), eng_w.metrics()
+    assert mp["late_records"] > 0
+    assert mp["late_records"] == mw["late_records"]
+    assert mp["windows_fired"] == mw["windows_fired"]
+    assert sink_p.payloads == sink_w.payloads
+
+
+def test_sliding_windows_fire_across_modes():
+    kw = dict(window=2.0, slide=1.0)
+    eng_p, sink_p = run_windowed("poll", **kw)
+    _, sink_w = run_windowed("wakeup", **kw)
+    assert sink_p.payloads == sink_w.payloads
+    # each record lands in size/slide = 2 windows
+    starts = {p["window"][0] for p in sink_p.payloads}
+    assert len(starts) >= 2
+    assert eng_p.metrics()["windows_fired"] == len(sink_p.payloads)
+
+
+def test_idle_partition_stalls_watermark_deterministically():
+    # all keys hash to one partition -> the other partition's watermark
+    # stays at -inf and nothing may fire (the idle-partition stall,
+    # surfaced deterministically rather than by wall-clock timeout)
+    eng, sink = run_windowed("wakeup", n_keys=1, partitions=4)
+    m = eng.metrics()
+    assert m["windows_fired"] == 0 and sink.payloads == []
+    spe = [rt for rt in eng.runtimes if rt.name.startswith("spe")][0]
+    assert len(spe._maxet) < 4 and spe.n_processed == 60
+
+
+def test_processing_time_mode_ignores_event_time():
+    # same spec with timeMode=processing: the flush-timer path runs and
+    # every record passes through (no watermarking, no lateness)
+    eng, sink = run_windowed("wakeup", time_mode="processing",
+                             et_jitter=1.0)
+    m = eng.metrics()
+    assert m["windows_fired"] == 0 and m["late_records"] == 0
+    assert sink.payloads, "processing-time SPE must still emit"
+
+
+# ---------------------------------------------------------------------------
+# Cross-process fingerprint (spawn workers vs inline)
+# ---------------------------------------------------------------------------
+
+FP_GRID = SweepSpec(
+    name="event_time_fp",
+    axes={"delivery": ["poll", "wakeup"], "windowed": [0, 1]},
+    base={"topology": "star", "n_hosts": 8, "n_brokers": 1,
+          "n_topics": 2, "n_producers": 2, "rate_kbps": 16.0,
+          "horizon": 10.0, "window_s": 1.0, "et_jitter_s": 0.5,
+          "allowed_lateness": 0.1, "checkpoint_interval": 2.0,
+          "seed": 0})
+
+
+def test_windowed_fingerprint_stable_across_processes(tmp_path):
+    inline = run_sweep(FP_GRID, workers=1, cache_dir=None)
+    spawned = run_sweep(FP_GRID, workers=2,
+                        cache_dir=str(tmp_path / "cache"))
+    assert inline.fingerprint() == spawned.fingerprint()
+    # the new metric fields are live in the fingerprinted rows
+    windowed_rows = [r for r in inline.rows if r["params"]["windowed"]]
+    assert all(r["metrics"]["windows_fired"] > 0 for r in windowed_rows)
+    assert all(r["metrics"]["checkpoint_count"] > 0
+               for r in windowed_rows)
+    for r in inline.rows:
+        for k in ("windows_fired", "late_records", "checkpoint_count",
+                  "recovered_duplicates"):
+            assert k in r["metrics"]

@@ -1,7 +1,7 @@
-"""Fingerprint-parity regression pin (partition refactor, PR 3).
+"""Fingerprint-parity regression pins.
 
-``partitions=1`` + unkeyed producers + ``linger_ms=0`` must reproduce
-the pre-partition engine *exactly*: the values below are
+PR 3 (partitions): ``partitions=1`` + unkeyed producers + ``linger_ms=0``
+must reproduce the pre-partition engine *exactly*: the values below are
 ``Engine.metrics()`` outputs for the CI sweep-smoke grid captured at the
 pre-refactor commit (PR 2 head).  Every pinned field — event counts, RNG-
 dependent latencies at full float precision, delivery tallies — must
@@ -9,9 +9,19 @@ still match bit-for-bit.  New fields added by the refactor (per-partition
 tallies, ``produce_batches``, …) are intentionally not pinned; moved
 fields are covered by the compat shims (``TopicMeta`` proxies, string-
 keyed ``cluster.logs``).
+
+PR 4 (operator graphs): the processing-time / no-checkpoint SPE
+configuration must reproduce the pre-operator-graph runtime *exactly* —
+the word-count pipeline pins below (engine events + a digest of the
+sink's payload sequence) were captured at the PR 3 head, before
+``core/spe.py`` was refactored from monolithic ``Query`` subclasses
+into operator chains.
 """
+import hashlib
+
 import pytest
 
+from repro.core import Engine, PipelineSpec
 from repro.sweep import SweepSpec, run_sweep
 
 GRID = SweepSpec(
@@ -101,3 +111,78 @@ def test_new_fields_are_single_partition_shaped(rows):
         assert got["n_groups"] == 0 and got["group_lag"] == {}
         assert got["produce_batches"] == got["records_produced"]
         assert set(got["partition_produced"]) == {"t0/0", "t1/0"}
+
+
+def test_event_time_fields_are_inert_without_spes(rows):
+    # no SPE in the pinned grid: the operator-graph metrics must read
+    # exactly zero (they are fingerprinted, so inert means inert)
+    for got in rows.values():
+        for k in ("windows_fired", "window_emits", "late_records",
+                  "checkpoint_count", "recovered_duplicates",
+                  "spe_recoveries"):
+            assert got[k] == 0, (k, got[k])
+
+
+# ---------------------------------------------------------------------------
+# PR 4 pin: processing-time SPE pipeline (pre-operator-graph capture)
+# ---------------------------------------------------------------------------
+
+
+def word_count_spec(delivery):
+    docs = ["to be or not to be", "be the change", "stream all things",
+            "not all who wander are lost"]
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    for h in ["b", "h1", "h2", "h3", "h4"]:
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker("b")
+    for t in ["raw", "words", "counts"]:
+        spec.add_topic(t, leader="b")
+    spec.add_producer("h1", "DIRECTORY", topic="raw", docs=docs,
+                      totalMessages=8, interval=0.3)
+    spec.add_spe("h2", query="split", inTopic="raw", outTopic="words",
+                 pollInterval=0.05)
+    spec.add_spe("h3", query="count", inTopic="words", outTopic="counts",
+                 window=0.5, pollInterval=0.05)
+    spec.add_consumer("h4", "METRICS", topic="counts", pollInterval=0.05)
+    return spec
+
+
+# captured at the PR 3 head (monolithic Query runtime), seed 0,
+# run until sim t=20: engine events, e2e aggregates at full precision,
+# and a sha256 digest of the sink's payload sequence
+SPE_PINNED = {
+    "poll": {
+        "engine_events": 1352, "events_scheduled": 1357,
+        "records_produced": 24, "records_delivered": 24,
+        "e2e_count": 8, "e2e_sum": 2.781267564459786,
+        "produce_batches": 24,
+    },
+    "wakeup": {
+        "engine_events": 184, "events_scheduled": 186,
+        "records_produced": 24, "records_delivered": 24,
+        "e2e_count": 8, "e2e_sum": 2.6567097619999998,
+        "produce_batches": 24,
+    },
+}
+SPE_SINK_DIGEST = "f0f84300d0db8d91"
+
+
+@pytest.mark.parametrize("delivery", sorted(SPE_PINNED))
+def test_processing_time_spe_pipeline_reproduced_exactly(delivery):
+    eng = Engine(word_count_spec(delivery), seed=0)
+    eng.run(until=20.0)
+    got = eng.metrics()
+    for field, want in SPE_PINNED[delivery].items():
+        assert got[field] == want, \
+            f"{delivery}: metrics[{field!r}] = {got[field]!r}, " \
+            f"pinned {want!r}"
+    sink = [rt for rt in eng.runtimes
+            if rt.name.startswith("consumer")][0]
+    digest = hashlib.sha256(repr(sink.payloads).encode()).hexdigest()[:16]
+    assert digest == SPE_SINK_DIGEST, \
+        "SPE output payload sequence diverged from the pre-refactor pin"
+    # processing-time mode exercises no event-time machinery
+    for k in ("windows_fired", "late_records", "checkpoint_count",
+              "recovered_duplicates"):
+        assert got[k] == 0

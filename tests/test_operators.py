@@ -1,0 +1,241 @@
+"""Unit tests for the operator-graph layer (core/operators.py) and the
+checkpoint state backends (core/state.py): element flow, pane
+assignment/firing, deterministic fire order, the jit-bucket padding
+property of window aggregates, and snapshot/restore/reset round-trips.
+"""
+import numpy as np
+import pytest
+
+from repro.core.operators import (
+    BatchOp, Element, Filter, FlatMap, KeyBy, Map, OpContext,
+    OperatorChain, Sink, SlidingWindow, StatefulMap, TumblingWindow,
+    WindowAggregate, jit_bucket,
+)
+from repro.core.state import FileStateBackend, MemoryStateBackend
+
+CTX = OpContext()
+
+
+def elems(*payloads, et=None, key=None):
+    return [Element(p, 10, 0.0 if et is None else et[i], key)
+            for i, p in enumerate(payloads)]
+
+
+# ---------------------------------------------------------------------------
+# Stateless stages
+# ---------------------------------------------------------------------------
+
+
+def test_map_filter_flatmap_chain():
+    chain = OperatorChain([
+        Map(lambda p: p + 1),
+        Filter(lambda p: p % 2 == 0),
+        FlatMap(lambda p: [p, p * 10]),
+    ])
+    out = chain.process(elems(1, 2, 3), CTX)
+    assert [e.payload for e in out] == [2, 20, 4, 40]
+    # size passes through unless the fn returns (payload, size)
+    assert all(e.size == 10 for e in out)
+    out = OperatorChain([Map(lambda p: (p, 99))]).process(elems(7), CTX)
+    assert (out[0].payload, out[0].size) == (7, 99)
+
+
+def test_keyby_field_and_callable():
+    out = OperatorChain([KeyBy("user")]).process(
+        elems({"user": "a"}, {"user": "b"}), CTX)
+    assert [e.key for e in out] == ["a", "b"]
+    out = OperatorChain([KeyBy(lambda p: p * 2)]).process(elems(3), CTX)
+    assert out[0].key == 6
+
+
+def test_stateful_map_keeps_state():
+    def fn(state, p):
+        state["n"] = state.get("n", 0) + p
+        return state["n"]
+
+    op = StatefulMap(fn)
+    chain = OperatorChain([op])
+    assert [e.payload for e in chain.process(elems(1, 2, 3), CTX)] \
+        == [1, 3, 6]
+    snap = chain.snapshot()
+    chain.process(elems(10), CTX)
+    assert op.state["n"] == 16
+    chain.restore(snap)
+    assert op.state["n"] == 6
+    chain.reset()
+    assert op.state == {}
+
+
+def test_batchop_one_to_one_keeps_event_times():
+    op = BatchOp(lambda es, ctx: [(e.payload * 2, e.size) for e in es])
+    out = op.process(elems(1, 2, et=[5.0, 7.0]), CTX)
+    assert [e.payload for e in out] == [2, 4]
+    assert [e.event_time for e in out] == [5.0, 7.0]
+    # collapsing outputs inherit the batch max event time
+    op2 = BatchOp(lambda es, ctx: [(sum(e.payload for e in es), 1)])
+    out = op2.process(elems(1, 2, et=[5.0, 7.0]), CTX)
+    assert out[0].payload == 3 and out[0].event_time == 7.0
+
+
+def test_sink_swallows_or_passes_through():
+    seen = []
+    out = OperatorChain([Sink(lambda e, ctx: seen.append(e.payload))]) \
+        .process(elems(1, 2), CTX)
+    assert seen == [1, 2] and out == []
+    out = OperatorChain([
+        Sink(lambda e, ctx: None, passthrough=True)]) \
+        .process(elems(1), CTX)
+    assert len(out) == 1
+
+
+# ---------------------------------------------------------------------------
+# Windows: pane assignment, firing, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_tumbling_window_assignment_and_firing():
+    w = TumblingWindow(1.0)
+    chain = OperatorChain([w])
+    chain.process(
+        [Element("a", 1, 0.2, "k"), Element("b", 1, 0.8, "k"),
+         Element("c", 1, 1.1, "k"), Element("d", 1, 0.5, "j")], CTX)
+    assert set(w.state["panes"]) == {("k", 0.0), ("k", 1.0), ("j", 0.0)}
+    # watermark below end: nothing fires
+    assert chain.advance_watermark(0.9, CTX) == []
+    fired = chain.advance_watermark(1.0, CTX)
+    # [0,1) panes fire for both keys, sorted by (start, repr(key))
+    assert [(e.key, e.payload["window_start"]) for e in fired] == \
+        [("j", 0.0), ("k", 0.0)]
+    assert fired[1].payload["records"] == ["a", "b"]
+    assert fired[1].event_time == 1.0
+    assert fired[1].window == ("'k'", 0.0, 1.0)
+    # pane is gone after firing; the [1,2) pane remains
+    assert set(w.state["panes"]) == {("k", 1.0)}
+
+
+def test_tumbling_window_lateness_delays_firing():
+    w = TumblingWindow(1.0, lateness_s=0.5)
+    chain = OperatorChain([w])
+    chain.process([Element("a", 1, 0.1, None)], CTX)
+    assert chain.advance_watermark(1.2, CTX) == []
+    assert len(chain.advance_watermark(1.5, CTX)) == 1
+
+
+def test_sliding_window_multi_assignment():
+    w = SlidingWindow(2.0, 1.0)
+    chain = OperatorChain([w])
+    chain.process([Element("a", 1, 2.5, None)], CTX)
+    # et=2.5 belongs to [1,3) and [2,4)
+    assert sorted(s for _, s in w.state["panes"]) == [1.0, 2.0]
+    fired = chain.advance_watermark(3.0, CTX)
+    assert [e.payload["window_start"] for e in fired] == [1.0]
+
+
+def test_window_fire_order_is_sorted_not_insertion():
+    w = TumblingWindow(1.0)
+    chain = OperatorChain([w])
+    # insert in deliberately shuffled (key, start) order
+    for key, et in [("z", 0.1), ("a", 1.3), ("m", 0.2), ("a", 0.9),
+                    ("z", 1.8)]:
+        chain.process([Element(key, 1, et, key)], CTX)
+    fired = chain.advance_watermark(2.0, CTX)
+    assert [(e.payload["window_start"], e.key) for e in fired] == \
+        [(0.0, "a"), (0.0, "m"), (0.0, "z"), (1.0, "a"), (1.0, "z")]
+
+
+def test_window_snapshot_restore_reset():
+    w = TumblingWindow(1.0)
+    chain = OperatorChain([w])
+    chain.process([Element("a", 1, 0.3, "k")], CTX)
+    snap = chain.snapshot()
+    chain.process([Element("b", 1, 0.4, "k")], CTX)
+    assert len(w.state["panes"][("k", 0.0)]) == 2
+    chain.restore(snap)
+    assert len(w.state["panes"][("k", 0.0)]) == 1
+    chain.reset()
+    assert w.state == {"panes": {}}
+    # reset window still accepts elements (pane dict re-created)
+    chain.process([Element("c", 1, 0.1, "k")], CTX)
+    assert len(w.state["panes"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Window aggregates: jit buckets + padding property
+# ---------------------------------------------------------------------------
+
+
+def _pane(values, key="k"):
+    return Element({"key": key, "window_start": 0.0, "window_end": 1.0,
+                    "records": list(values), "sizes": [1] * len(values),
+                    "event_times": [0.0] * len(values)},
+                   len(values), 1.0, key, window=(repr(key), 0.0, 1.0))
+
+
+def test_window_aggregate_count_sum_mean():
+    vals = [1.0, 2.0, 3.5]
+    for agg, want in [("count", 3.0), ("sum", 6.5),
+                      ("mean", 6.5 / 3)]:
+        out = WindowAggregate(agg).process([_pane(vals)], CTX)
+        assert out[0].payload["agg"] == agg
+        assert out[0].payload["n"] == 3
+        assert np.isclose(out[0].payload["value"], want)
+        assert out[0].window == ("'k'", 0.0, 1.0)
+
+
+def test_window_aggregate_padding_never_changes_outputs():
+    # jit-bucket policy: the jitted reduction sees bucket sizes only;
+    # masked padding must never change real-row results
+    rng = np.random.default_rng(7)
+    agg = WindowAggregate("sum")
+    for n in (1, 15, 16, 17, 21, 100):
+        vals = rng.normal(0, 1, n).astype(np.float32).tolist()
+        out = agg.process([_pane(vals)], CTX)
+        assert np.isclose(out[0].payload["value"],
+                          np.float32(np.sum(np.asarray(vals,
+                                                       np.float32))),
+                          atol=1e-4)
+        cnt = WindowAggregate("count").process([_pane(vals)], CTX)
+        assert cnt[0].payload["value"] == float(n)    # exact under pad
+    # only bucket sizes are compiled
+    assert set(agg._jit_cache) <= {jit_bucket(n)
+                                   for n in (1, 15, 16, 17, 21, 100)}
+
+
+def test_window_aggregate_value_field_and_callable():
+    pane = _pane([{"v": 2.0}, {"v": 5.0}])
+    out = WindowAggregate("sum", value_field="v").process([pane], CTX)
+    assert np.isclose(out[0].payload["value"], 7.0)
+    out = WindowAggregate(lambda ps: len(ps) * 100.0).process([pane], CTX)
+    assert out[0].payload["value"] == 200.0
+    # non-pane elements pass through untouched
+    out = WindowAggregate("count").process(elems({"x": 1}), CTX)
+    assert out[0].payload == {"x": 1}
+
+
+# ---------------------------------------------------------------------------
+# State backends
+# ---------------------------------------------------------------------------
+
+
+def test_memory_backend_isolation():
+    b = MemoryStateBackend()
+    snap = {"panes": {("k", 0.0): [1, 2]}}
+    b.put("spe", snap)
+    snap["panes"][("k", 0.0)].append(3)     # caller mutation: no effect
+    got = b.latest("spe")
+    assert got == {"panes": {("k", 0.0): [1, 2]}}
+    got["panes"].clear()                    # reader mutation: no effect
+    assert b.latest("spe")["panes"]
+    assert b.latest("missing") is None
+
+
+def test_file_backend_roundtrip_and_torn_file(tmp_path):
+    b = FileStateBackend(str(tmp_path))
+    b.put("spe@h1", {"epoch": 2, "maxet": {0: 1.5}})
+    assert b.latest("spe@h1") == {"epoch": 2, "maxet": {0: 1.5}}
+    b.put("spe@h1", {"epoch": 3, "maxet": {0: 9.9}})
+    assert b.latest("spe@h1")["epoch"] == 3
+    # torn/corrupt snapshot reads as missing, never crashes recovery
+    with open(b._path("torn"), "wb") as f:
+        f.write(b"\x80garbage")
+    assert b.latest("torn") is None

@@ -1,0 +1,179 @@
+"""Checkpointed recovery of window operators (ISSUE 4 acceptance):
+kill a window-operator host mid-window, restore, and assert the
+emission contracts —
+
+- ``exactly_once`` + ``checkpoint_interval > 0``: zero lost and zero
+  duplicate window emissions (the transactional sink holds outputs
+  until the checkpoint commits them; replay regenerates the
+  uncommitted ones), in *both* delivery modes;
+- ``at_least_once``: zero lost windows, but windows fired after the
+  last checkpoint re-fire on replay — ``recovered_duplicates`` counts
+  them (the measurable semantics axis);
+- no checkpointing at all: a cold restart loses accumulated panes —
+  windows are lost (the failure mode stream2gym exists to surface).
+"""
+import pytest
+
+from repro.core import Engine, PipelineSpec
+
+TOTAL = 60
+FAIL_AT, FAIL_LEN, HORIZON = 3.0, 3.0, 40.0
+
+
+def recovery_spec(delivery, *, ckpt=0.5, sem="at_least_once",
+                  fault=True, state_dir=None):
+    spec = PipelineSpec(delivery=delivery)
+    spec.add_switch("s1")
+    for h in ["b", "p1", "w", "c"]:
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=1000.0)
+    spec.add_broker("b")
+    spec.add_topic("in", leader="b", partitions=2)
+    spec.add_topic("agg", leader="b")
+    spec.add_producer("p1", "SYNTHETIC", topics=["in"], rateKbps=40.0,
+                      msgSize=500, totalMessages=TOTAL, etJitterS=0.3)
+    cfg = dict(query="identity", inTopic="in", outTopic="agg",
+               timeMode="event", window=1.0, allowedLateness=0.2,
+               keyField="src", agg="count", checkpointInterval=ckpt,
+               semantics=sem, pollInterval=0.1)
+    if state_dir is not None:
+        cfg["stateDir"] = state_dir
+    spec.add_spe("w", **cfg)
+    spec.add_consumer("c", "METRICS", topic="agg", pollInterval=0.1)
+    if fault:
+        # kill the window operator's host mid-window, heal later
+        spec.add_fault(FAIL_AT, "host_down", "w", duration=FAIL_LEN)
+    return spec
+
+
+def run_spec(spec, seed=3):
+    eng = Engine(spec, seed=seed)
+    eng.run(until=HORIZON)
+    sink = [rt for rt in eng.runtimes if rt.name.startswith("consumer")][0]
+    return eng, sink
+
+
+def window_multiset(sink):
+    return sorted((repr(p["key"]), tuple(p["window"]), p["value"],
+                   p["n"]) for p in sink.payloads)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Fault-free reference run: the expected window emissions."""
+    _, sink = run_spec(recovery_spec("wakeup", ckpt=0.0, fault=False))
+    ms = window_multiset(sink)
+    assert ms, "reference run must fire windows"
+    return ms
+
+
+@pytest.mark.parametrize("delivery", ["wakeup", "poll"])
+def test_exactly_once_no_lost_no_duplicate_windows(reference, delivery):
+    eng, sink = run_spec(
+        recovery_spec(delivery, sem="exactly_once"))
+    m = eng.metrics()
+    assert m["spe_recoveries"] == 1, "the SPE must actually recover"
+    assert m["checkpoint_count"] > 0
+    # zero duplicates AND zero losses: the emitted multiset equals the
+    # fault-free reference exactly
+    assert m["recovered_duplicates"] == 0
+    assert window_multiset(sink) == reference
+
+
+@pytest.mark.parametrize("delivery", ["wakeup", "poll"])
+def test_at_least_once_no_loss_but_measurable_duplicates(reference,
+                                                         delivery):
+    eng, sink = run_spec(
+        recovery_spec(delivery, sem="at_least_once"))
+    m = eng.metrics()
+    assert m["spe_recoveries"] == 1
+    got = window_multiset(sink)
+    # no window is lost...
+    assert set(got) >= set(reference)
+    # ...but the mid-window kill re-fires the windows emitted after the
+    # last checkpoint: duplicates are the measurable semantics axis
+    assert m["recovered_duplicates"] == len(got) - len(reference)
+    assert m["recovered_duplicates"] >= 1
+    assert m["window_emits"] - m["windows_emitted_distinct"] == \
+        m["recovered_duplicates"]
+
+
+def test_no_checkpoint_cold_restart_loses_windows(reference):
+    eng, sink = run_spec(recovery_spec("wakeup", ckpt=0.0))
+    m = eng.metrics()
+    assert m["spe_recoveries"] == 0 and m["checkpoint_count"] == 0
+    assert len(eng.monitor.events_of("spe_cold_restart")) == 1
+    # panes buffered before the kill are gone and their input offsets
+    # were already committed past them: the records they held never
+    # reach any emission — windowed record counts shrink vs the
+    # fault-free reference (whole windows, or partially-refilled panes
+    # re-opened by straggler records produced during the outage)
+    got = window_multiset(sink)
+    counted = sum(x[3] for x in got)
+    counted_ref = sum(x[3] for x in reference)
+    assert counted < counted_ref, \
+        f"cold restart must lose windowed records " \
+        f"({counted} vs {counted_ref})"
+    assert got != reference
+
+
+def test_file_state_backend_recovery(tmp_path, reference):
+    eng, sink = run_spec(
+        recovery_spec("wakeup", sem="exactly_once",
+                      state_dir=str(tmp_path / "ckpt")))
+    m = eng.metrics()
+    assert m["spe_recoveries"] == 1
+    assert m["recovered_duplicates"] == 0
+    assert window_multiset(sink) == reference
+    assert list((tmp_path / "ckpt").glob("*.ckpt")), \
+        "file backend must have written snapshots"
+
+
+@pytest.mark.parametrize("delivery", ["wakeup", "poll"])
+def test_recovery_wakes_parked_waiter_for_replay(delivery):
+    # regression: the SPE drains its input and *parks* before the
+    # fault; producers are long done so the HW never advances again.
+    # Recovery must wake the parked waiter itself (via _notify after
+    # seeking), or the checkpointed suffix never replays and
+    # exactly_once silently loses the uncommitted windows.
+    #
+    # Timeline: 60 msgs x 0.1 s -> production ends ~6.0 s and the SPE
+    # drains + parks right after; checkpoints at 4.0/8.0/...; windows
+    # [3,4) and [4,5) fire ~4.3-5.5 s, i.e. AFTER the 4.0 s checkpoint
+    # -> held uncommitted (exactly_once).  The 7.0 s kill lands on a
+    # parked runtime with an uncommitted suffix: recovery rewinds the
+    # offsets to the 4.0 s positions and must wake the waiter so the
+    # suffix replays and recommits.
+    def build(fault):
+        spec = recovery_spec(delivery, ckpt=4.0, sem="exactly_once",
+                             fault=False)
+        if fault:
+            spec.add_fault(7.0, "host_down", "w", duration=1.5)
+        return spec
+
+    _, ref_sink = run_spec(build(fault=False))
+    eng, sink = run_spec(build(fault=True))
+    m = eng.metrics()
+    assert m["spe_recoveries"] == 1
+    assert m["recovered_duplicates"] == 0
+    assert window_multiset(sink) == window_multiset(ref_sink), \
+        "parked waiter never replayed the checkpointed suffix"
+
+
+def test_exactly_once_requires_event_time_mode():
+    spec = recovery_spec("wakeup", sem="exactly_once")
+    spe = [c for c in spec.components() if c.role == "spe"][0]
+    spe.cfg["timeMode"] = "processing"
+    problems = spec.validate()
+    assert any("exactly_once requires timeMode='event'" in p
+               for p in problems), problems
+
+
+def test_recovery_restores_offsets_not_redelivering_committed(reference):
+    # after recovery the input offsets rewind to the checkpoint; the
+    # replayed records rebuild the panes exactly — processed counts
+    # exceed TOTAL (replay) but emissions match the reference
+    eng, sink = run_spec(recovery_spec("wakeup", sem="exactly_once"))
+    spe = [rt for rt in eng.runtimes if rt.name.startswith("spe")][0]
+    assert spe.n_processed > TOTAL, "replay must re-process a suffix"
+    assert sum(v for v in spe._proc_off.values()) == TOTAL
+    assert window_multiset(sink) == reference
