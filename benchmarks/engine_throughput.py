@@ -36,6 +36,17 @@ the existing delivery events, so window firing must stay nearly free —
 CI gates ``window_event_overhead`` (windowed events / identity events)
 below 1.3x.
 
+Since the allocation-free delivery refactor a fourth, ``columnar`` axis
+measures the BatchView hot path: the wakeup scenario runs with
+``columnar=False`` (per-row Record materialization at the fetch
+boundary, the pre-refactor delivery pattern) and ``columnar=True``
+(zero-copy views), asserting the delivered record sets and *every*
+deterministic metric are bit-identical, and reports
+``record_alloc_reduction`` — Records materialized before over after.
+The counter is deterministic (``record_objects_materialized`` in
+``Engine.metrics``), so CI gates the allocation win without trusting
+wall clock.
+
 Output contract (consumed by CI and tracked across PRs):
 ``BENCH_engine.json`` — see ``benchmarks/run.py`` for the schema.
 """
@@ -139,6 +150,46 @@ def run_linger(*, n_hosts: int, horizon: float, total_msgs: int) -> dict:
     b0 = out["linger_0ms"]["produce_batches"]
     b1 = out[f"linger_{LINGER_MS:g}ms"]["produce_batches"]
     out["produce_event_reduction"] = b0 / max(1, b1)
+    return out
+
+
+def run_columnar(*, n_hosts: int, horizon: float) -> dict:
+    """The columnar axis: Record-allocation reduction at identical work.
+
+    One wakeup-mode run per ``columnar`` setting; the record sets every
+    consumer received and all fingerprinted metrics must be
+    bit-identical — only the allocation counter (and wall clock) moves.
+    """
+    out = {}
+    delivered = {}
+    metrics = {}
+    for columnar in (False, True):
+        spec = build("wakeup", n_hosts=n_hosts)
+        spec.columnar = columnar
+        eng = Engine(spec, seed=0)
+        mon = eng.run(until=horizon)
+        delivered[columnar] = sorted(
+            (mid, c) for mid, m in mon.msgs.items() for c in m.deliveries)
+        m = eng.metrics()
+        m.pop("wall_s")
+        metrics[columnar] = m
+        key = "batchview" if columnar else "records"
+        out[key] = {
+            "records_delivered": m["records_delivered"],
+            "record_objects_materialized":
+                m["record_objects_materialized"],
+            "engine_events": m["engine_events"],
+        }
+    assert delivered[False] == delivered[True], \
+        "columnar delivery changed the delivered record sets"
+    strip = dict(metrics[False]), dict(metrics[True])
+    before = strip[0].pop("record_objects_materialized")
+    after = strip[1].pop("record_objects_materialized")
+    assert strip[0] == strip[1], \
+        "columnar delivery changed a deterministic metric: " + repr(
+            [k for k in strip[0] if strip[0][k] != strip[1][k]][:5])
+    assert before > 0, "record mode must materialize per-row Records"
+    out["record_alloc_reduction"] = before / max(1, after)
     return out
 
 
@@ -293,6 +344,16 @@ def run(*, smoke: bool = False, out: str = "BENCH_engine.json") -> dict:
     emit("engine/event_time", 0.0,
          f"window_overhead={results['window_event_overhead']:.2f}x;"
          f"windows={results['event_time']['windowed']['windows_fired']}")
+    # columnar axis: the BatchView delivery boundary must erase per-row
+    # Record materialization at identical behavior (deterministic
+    # counter; CI gates >= 5x reduction)
+    results["columnar"] = run_columnar(n_hosts=n_hosts, horizon=horizon)
+    results["record_alloc_reduction"] = \
+        results["columnar"]["record_alloc_reduction"]
+    emit("engine/columnar", 0.0,
+         f"record_allocs={results['record_alloc_reduction']:.0f}x;"
+         f"materialized="
+         f"{results['columnar']['batchview']['record_objects_materialized']}")
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
     return results
@@ -308,4 +369,5 @@ if __name__ == "__main__":
     print(json.dumps({k: v for k, v in res.items()
                       if k in ("speedup", "event_reduction",
                                "produce_event_reduction",
-                               "window_event_overhead")}, indent=2))
+                               "window_event_overhead",
+                               "record_alloc_reduction")}, indent=2))

@@ -14,18 +14,32 @@ perf-trajectory record tracked across PRs.  Schema::
                     records_per_wall_s, sim_s_per_wall_s},
       "wakeup":    {... same keys ...},
       "speedup":         wall(poll) / wall(wakeup),   # same simulated work
-      "event_reduction": events(poll) / events(wakeup)
+      "event_reduction": events(poll) / events(wakeup),
+      "linger":    {...},            # produce batcher axis
+      "produce_event_reduction": batches(linger 0) / batches(linger>0),
+      "event_time": {...},           # windowed vs identity pipelines
+      "window_event_overhead": events(windowed) / events(identity),
+      "columnar":  {records, batchview: {records_delivered,
+                    record_objects_materialized, engine_events}},
+      "record_alloc_reduction":      # Records materialized, before/after
+          materialized(columnar=False) / max(1, materialized(True))
     }
 
 ``poll`` is the legacy fixed-interval delivery loop (the pre-refactor
 event pattern), ``wakeup`` the batched event-driven hot path; both modes
 must report identical ``records_delivered`` (asserted), so the wall-time
-ratio is a pure scheduler-throughput measurement.
+ratio is a pure scheduler-throughput measurement.  The ``columnar``
+axis compares zero-copy ``BatchView`` delivery against the legacy
+per-row ``Record`` materialization at asserted-identical behavior; the
+allocation counter is deterministic, so CI gates it (>= 5x) without
+trusting wall clock.
 
 ``sweep_scale`` additionally writes ``BENCH_sweep_scale.json`` (schema
-in ``benchmarks/sweep_scale.py``): the 100-400-node generated-topology
-scale record plus the reachability-cache before/after gate (identical
-engine event counts, ``probe_reduction`` on graph recomputations).
+in ``benchmarks/sweep_scale.py``): the 100/200/400-node generated-
+topology scale record — now with a per-phase timing breakdown
+(spec build / engine init / run loop / metrics) per size — plus the
+reachability-cache before/after gate (identical engine event counts,
+``probe_reduction`` on graph recomputations).
 
 ``engine_throughput``, ``fig8_accuracy`` and ``sweep_scale`` are thin
 ``repro.sweep`` definitions — grids executed by the sweep runner.

@@ -8,8 +8,16 @@ reachability-cache invalidation path).
 
 Two claims, both recorded in ``BENCH_sweep_scale.json``:
 
-1. **Scale** — scenarios at each size complete through the sweep runner
-   (serial: wall times are the measurement).
+1. **Scale** — scenarios at 100/200/400 nodes complete in (multiples
+   of) real time, with a **per-phase timing breakdown** so regressions
+   point at a layer instead of a number: ``build_spec_s`` (topology
+   generation + spec assembly), ``engine_init_s`` (cluster/runtime
+   construction), ``run_s`` (the event loop — the number that must stay
+   above real time), ``metrics_s`` (result aggregation).  The phase
+   split needs intra-run timers, so the sizes run directly on
+   :class:`Engine` rather than through the sweep runner;
+   ``sim_s_per_wall_s`` divides by the run phase, same as the sweep
+   runner's ``wall_s`` measured.
 2. **Reachability caching** — the per-network-epoch memoization in
    ``repro.core.netem.Network`` (connected components for
    ``reachable``, per-source SSSP for routes) collapses the controller's
@@ -25,7 +33,10 @@ Schema::
     {
       "sizes": {n: {engine_events, wall_s, sim_s_per_wall_s,
                     records_delivered, elections, reach_queries,
-                    path_queries, reach_computes}},
+                    path_queries, reach_computes,
+                    record_objects_materialized,
+                    phases: {build_spec_s, engine_init_s, run_s,
+                             metrics_s}}},
       "reach_cache_compare": {n_hosts, horizon_sim_s,
                               events_uncached, events_cached,
                               computes_uncached, computes_cached,
@@ -38,12 +49,15 @@ import argparse
 import json
 import os
 import sys
+import time
 
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
+from repro.core import Engine  # noqa: E402
 from repro.sweep import SweepSpec, run_sweep  # noqa: E402
+from repro.sweep.scenarios import build_scenario  # noqa: E402
 from benchmarks.common import emit  # noqa: E402
 
 # caching must not change behavior, only skip recomputation: asserted on
@@ -64,19 +78,36 @@ def scale_base(horizon: float) -> dict:
     }
 
 
+def _run_sized(n_hosts: int, horizon: float) -> dict:
+    """One instrumented scale point: per-phase wall-clock breakdown."""
+    params = {**scale_base(horizon), "n_hosts": n_hosts}
+    t0 = time.perf_counter()
+    spec = build_scenario(params)
+    t1 = time.perf_counter()
+    eng = Engine(spec, seed=int(params["seed"]))
+    t2 = time.perf_counter()
+    eng.run(until=horizon)
+    t3 = time.perf_counter()
+    m = eng.metrics(wall_s=t3 - t2)
+    t4 = time.perf_counter()
+    m["phases"] = {
+        "build_spec_s": t1 - t0,
+        "engine_init_s": t2 - t1,
+        "run_s": t3 - t2,
+        "metrics_s": t4 - t3,
+    }
+    return m
+
+
 def run(*, smoke: bool = False, full: bool = False,
         out: str = "BENCH_sweep_scale.json") -> dict:
-    sizes = [60] if smoke else ([100, 200, 400] if full else [100, 200])
+    # `full` kept for compat; 400 nodes is part of the default record
+    sizes = [60] if smoke else [100, 200, 400]
     horizon = 8.0 if smoke else 20.0
     results: dict = {"sizes": {}}
 
-    size_sweep = SweepSpec(
-        name="sweep_scale",
-        axes={"n_hosts": sizes},
-        base=scale_base(horizon))
-    res = run_sweep(size_sweep, workers=1, cache_dir=None)
-    for row in res.rows:
-        n, m = row["params"]["n_hosts"], row["metrics"]
+    for n in sizes:
+        m = _run_sized(n, horizon)
         results["sizes"][n] = {
             "engine_events": m["engine_events"],
             "wall_s": m["wall_s"],
@@ -86,6 +117,9 @@ def run(*, smoke: bool = False, full: bool = False,
             "reach_queries": m["reach_queries"],
             "path_queries": m["path_queries"],
             "reach_computes": m["reach_computes"],
+            "record_objects_materialized":
+                m["record_objects_materialized"],
+            "phases": m["phases"],
         }
         emit(f"sweep_scale/{n}nodes", m["wall_s"] * 1e6,
              f"events={m['engine_events']};"
@@ -135,7 +169,7 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (60 nodes)")
     ap.add_argument("--full", action="store_true",
-                    help="include the 400-node scenario")
+                    help="compat flag (400 nodes now runs by default)")
     ap.add_argument("--out", default="BENCH_sweep_scale.json")
     args = ap.parse_args()
     res = run(smoke=args.smoke, full=args.full, out=args.out)

@@ -1,13 +1,18 @@
-"""CI sweep smoke: tiny 2x2x2x2 grid, 2 workers, resume + determinism.
+"""CI sweep smoke: tiny 2x2x2x2 grid, warm workers, resume + determinism.
 
 Runs a 2x2x2x2 grid (topology size x delivery mode x topic partitions x
-windowed operator pipeline) on 2 spawn workers, deletes part of the
-per-scenario cache, reruns, and asserts:
+windowed operator pipeline) on 2 **warm-pool** workers (forkserver with
+the lazy-JAX preload where the platform has it, spawn fallback),
+deletes part of the per-scenario cache, reruns, and asserts:
 
-- the rerun reuses the surviving cache entries (resume);
+- the rerun reuses the surviving cache entries (resume) — the
+  kill-anywhere contract is unchanged by the warm pool, since workers
+  still write each scenario's row atomically themselves;
 - the resumed aggregate equals the uninterrupted run's fingerprint —
   event counts and all other deterministic metrics identical (wall
-  clock is excluded from the fingerprint, as in the bench smoke).
+  clock is excluded from the fingerprint, as in the bench smoke);
+- the second sweep ran on the *same* persistent worker pool (zero new
+  interpreter/numpy starts — the warm-worker claim, gated).
 
 The ``partitions`` axis makes the gate cover the per-partition hash
 fields; the ``windowed`` axis adds an event-time tumbling-window SPE
@@ -28,7 +33,7 @@ import sys
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-from repro.sweep import SweepSpec, run_sweep  # noqa: E402
+from repro.sweep import SweepSpec, run_sweep, warm_pool_pids  # noqa: E402
 
 CACHE = ".ci_sweep"
 
@@ -46,12 +51,16 @@ def main() -> None:
     shutil.rmtree(CACHE, ignore_errors=True)
     a = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
     assert len(a) == 16 and a.n_cached == 0
+    pids = warm_pool_pids()
+    assert len(pids) == 2, "first sweep must leave a live warm pool"
     for p in sorted(glob.glob(os.path.join(CACHE, "*.json")))[:5]:
         os.remove(p)
     b = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
     assert b.n_cached == 11, "resume must reuse the surviving cache"
     assert a.fingerprint() == b.fingerprint(), \
         "resumed sweep diverged from the uninterrupted run"
+    assert warm_pool_pids() == pids, \
+        "second sweep must reuse the warm worker pool"
     events = a.total("engine_events")
     assert events == b.total("engine_events") and events > 0
     fired = sum(r["metrics"]["windows_fired"] for r in a.rows

@@ -10,8 +10,11 @@ hash of its parameters — interrupt the run (Ctrl-C) and rerun it:
 finished scenarios are skipped; rerun untouched and the table prints
 from cache almost instantly.
 
-The ``if __name__ == "__main__"`` guard is required: workers are
-spawn-based and re-import this file.
+Workers come from the runner's *warm* persistent pool (forkserver with
+the engine stack preloaded where available) and are reused across
+sweeps in one process.  Keep the ``if __name__ == "__main__"`` guard:
+on platforms without forkserver the pool falls back to spawn, which
+re-imports this file.
 """
 import os
 import sys

@@ -283,6 +283,136 @@ class RecordBatch:
                 for i in range(lo, min(hi, self.n))]
 
 
+class BatchView:
+    """Zero-copy columnar view over one delivered log slice.
+
+    The allocation-free delivery boundary: ``Cluster.fetch`` hands
+    subscribers a ``BatchView`` of rows ``[lo, hi)`` of one (topic,
+    partition) log instead of a list of per-row :class:`Record` objects.
+    Numpy column slices are views (no copy); ``payloads``/``keys`` slice
+    the underlying pointer lists lazily (cached).
+
+    **Stability**: the view captures the column array and payload-list
+    *objects* at construction.  Log mutations never touch delivered rows
+    in place — appends write past ``hi``, capacity growth and divergence
+    truncation (``RecordBatch.copy_from``) swap in fresh arrays/lists —
+    so a view delivered after an in-flight network delay still reads
+    exactly the rows that were fetched, matching the eager
+    materialization semantics of the legacy path bit-for-bit.
+
+    **Compat boundary**: iteration / ``to_records()`` / ``record_at``
+    materialize classic :class:`Record` objects (offsets are absolute log
+    offsets, identical to ``records_slice``).  Every materialization is
+    tallied in ``Cluster.n_records_materialized`` — the deterministic
+    counter behind ``Engine.metrics()["record_objects_materialized"]``
+    and the CI allocation gate.
+    """
+
+    __slots__ = ("topic", "partition", "lo", "hi", "_msg_id", "_size",
+                 "_pt", "_et", "_epoch", "_plist", "_klist", "_prods",
+                 "_cum", "_counter", "_payloads", "_keys")
+
+    def __init__(self, batch: RecordBatch, topic: str, lo: int, hi: int,
+                 partition: int = 0, counter=None) -> None:
+        self.topic = topic
+        self.partition = partition
+        self.lo = lo
+        self.hi = hi
+        self._msg_id = batch.msg_id
+        self._size = batch.size
+        self._pt = batch.produce_time
+        self._et = batch.event_time
+        self._epoch = batch.epoch
+        self._cum = batch.cum_size
+        self._plist = batch.payloads
+        self._klist = batch.keys
+        self._prods = batch.producers
+        self._counter = counter          # Cluster (materialization tally)
+        self._payloads = None
+        self._keys = None
+
+    def __len__(self) -> int:
+        return self.hi - self.lo
+
+    # -- columnar access (zero-copy numpy slices) ----------------------
+
+    @property
+    def msg_id(self) -> np.ndarray:
+        return self._msg_id[self.lo:self.hi]
+
+    @property
+    def size(self) -> np.ndarray:
+        return self._size[self.lo:self.hi]
+
+    @property
+    def produce_time(self) -> np.ndarray:
+        return self._pt[self.lo:self.hi]
+
+    @property
+    def event_time(self) -> np.ndarray:
+        return self._et[self.lo:self.hi]
+
+    @property
+    def payloads(self) -> list:
+        if self._payloads is None:
+            self._payloads = self._plist[self.lo:self.hi]
+        return self._payloads
+
+    @property
+    def keys(self) -> list:
+        if self._keys is None:
+            self._keys = self._klist[self.lo:self.hi]
+        return self._keys
+
+    # -- python-scalar columns (one C conversion, no per-row numpy) ----
+
+    def msg_ids(self) -> list[int]:
+        return self._msg_id[self.lo:self.hi].tolist()
+
+    def sizes(self) -> list[int]:
+        return self._size[self.lo:self.hi].tolist()
+
+    def event_times(self) -> list[float]:
+        return self._et[self.lo:self.hi].tolist()
+
+    def total_bytes(self) -> int:
+        lo, hi = self.lo, self.hi
+        if hi <= lo:
+            return 0
+        base = int(self._cum[lo - 1]) if lo else 0
+        return int(self._cum[hi - 1]) - base
+
+    # -- Record materialization (compat boundary; counted) -------------
+
+    def _count(self, n: int) -> None:
+        if self._counter is not None:
+            self._counter.n_records_materialized += n
+
+    def record_at(self, i: int) -> Record:
+        """Materialize view row ``i`` (0-based within the view)."""
+        self._count(1)
+        j = self.lo + i
+        return Record(int(self._msg_id[j]), self.topic, self._plist[j],
+                      int(self._size[j]), float(self._pt[j]),
+                      self._prods[j], offset=j, epoch=int(self._epoch[j]),
+                      partition=self.partition, key=self._klist[j],
+                      event_time=float(self._et[j]))
+
+    def to_records(self) -> list[Record]:
+        return [self.record_at(i) for i in range(len(self))]
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self.record_at(i)
+
+
+def payloads_of(records) -> list:
+    """Payload list of a delivered batch (view or Record list)."""
+    if isinstance(records, BatchView):
+        return records.payloads
+    return [r.payload for r in records]
+
+
 @dataclass
 class PartitionMeta:
     """Leadership/ISR state of one (topic, partition)."""
@@ -499,6 +629,13 @@ class Cluster:
         self._msg_seq = 0
         self._batch_seq = 0
         self.n_produce_batches = 0      # flushed batches (produce requests)
+        # delivery-boundary Record materializations (deterministic; the
+        # columnar BatchView path keeps this at ~0, the legacy record
+        # path pays one per delivered row — see Engine.metrics)
+        self.n_records_materialized = 0
+        # columnar=False materializes Record lists at fetch time (the
+        # pre-BatchView delivery pattern, kept for parity + baselines)
+        self.columnar = bool(getattr(engine, "columnar", True))
         # client metadata: (client, topic, partition) -> believed leader
         self._client_meta: dict[tuple[str, str, int], str] = {}
         # broker belief: (broker, topic, partition) -> (is_leader, epoch)
@@ -1011,11 +1148,17 @@ class Cluster:
             return FETCH_BLOCKED
         self._consumer_offsets[okey] = off + n
         eng.monitor.broker_tx(leader, nbytes)
-        batch = log.batch.records_slice(topic, off, off + n, part)
+        # the zero-copy delivery boundary: a BatchView over the fetched
+        # rows (stable under later log mutations — see BatchView).  The
+        # legacy record path materializes it eagerly, exactly like the
+        # old records_slice, and pays the per-row counter.
+        view = BatchView(log.batch, topic, off, off + n, part,
+                         counter=self)
+        batch = view if self.columnar else view.to_records()
+        mids = view.msg_ids()
 
         def _deliver():
-            for r in batch:
-                eng.monitor.delivered(r, consumer.name, eng.now)
+            eng.monitor.delivered_many(mids, consumer.name, eng.now)
             consumer.on_records(eng, batch)
 
         # TCP-ordered responses: a small later response must not overtake

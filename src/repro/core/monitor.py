@@ -60,7 +60,14 @@ class Monitor:
         self.event(t, "msg_truncated", msg_id=rec.msg_id, topic=rec.topic)
 
     def delivered(self, rec, consumer: str, t: float) -> None:
-        self.msgs[rec.msg_id].deliveries.setdefault(consumer, t)
+        self.delivered_many((rec.msg_id,), consumer, t)
+
+    def delivered_many(self, msg_ids, consumer: str, t: float) -> None:
+        """Batched delivery tally (the columnar fetch path: one call per
+        response, no per-row Record objects)."""
+        msgs = self.msgs
+        for mid in msg_ids:
+            msgs[mid].deliveries.setdefault(consumer, t)
 
     # --- network counters --------------------------------------------------
 

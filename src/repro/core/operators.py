@@ -73,6 +73,39 @@ class Element:
     window: Optional[tuple] = None
 
 
+class ColumnBatch:
+    """Columnar element batch: the allocation-free fast path between
+    operators.
+
+    Parallel columns (payload/size/event_time/key, python scalars) stand
+    in for a list of :class:`Element` objects on the SPE ingest path.
+    Operators that implement ``process_cols`` (``Map`` / ``Filter`` /
+    ``KeyBy`` / the window assigners) transform the batch without
+    materializing per-row objects; :meth:`OperatorChain.process_cols`
+    falls back to :meth:`elements` at the first stage that doesn't
+    (``StatefulMap`` / ``FlatMap`` / ``BatchOp`` / arbitrary UDF stages)
+    — results are identical either way, only the allocations differ.
+    """
+
+    __slots__ = ("payloads", "sizes", "event_times", "keys")
+
+    def __init__(self, payloads: list, sizes: list, event_times: list,
+                 keys: Optional[list] = None) -> None:
+        self.payloads = payloads
+        self.sizes = sizes
+        self.event_times = event_times
+        self.keys = keys if keys is not None else [None] * len(payloads)
+
+    def __len__(self) -> int:
+        return len(self.payloads)
+
+    def elements(self) -> list[Element]:
+        """Materialize classic elements (the per-element fallback)."""
+        return [Element(p, s, t, k)
+                for p, s, t, k in zip(self.payloads, self.sizes,
+                                      self.event_times, self.keys)]
+
+
 @dataclass
 class OpContext:
     """Per-call context handed to operators (engine/runtime may be None
@@ -149,6 +182,23 @@ class Map(Operator):
                                e.window))
         return out
 
+    def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
+        """Columnar fast path: same per-payload fn calls, in the same
+        order, but no Element objects."""
+        fn = self.fn
+        pays: list = []
+        sizes: list = []
+        in_sizes = cols.sizes
+        for i, p in enumerate(cols.payloads):
+            r = fn(p)
+            if isinstance(r, tuple):
+                pays.append(r[0])
+                sizes.append(r[1])
+            else:
+                pays.append(r)
+                sizes.append(in_sizes[i])
+        return ColumnBatch(pays, sizes, cols.event_times, cols.keys)
+
 
 class StatefulMap(Operator):
     """Per-element transform with chain-checkpointed state:
@@ -199,6 +249,18 @@ class Filter(Operator):
     def process(self, elems, ctx):
         return [e for e in elems if self.pred(e.payload)]
 
+    def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
+        """Columnar fast path: one pred pass, mask-compress the columns."""
+        pred = self.pred
+        mask = [bool(pred(p)) for p in cols.payloads]
+        if all(mask):
+            return cols
+        keep = [i for i, m in enumerate(mask) if m]
+        return ColumnBatch([cols.payloads[i] for i in keep],
+                           [cols.sizes[i] for i in keep],
+                           [cols.event_times[i] for i in keep],
+                           [cols.keys[i] for i in keep])
+
 
 class KeyBy(Operator):
     """Attach a key: a field name (dict payloads) or a callable."""
@@ -217,6 +279,11 @@ class KeyBy(Operator):
         for e in elems:
             e.key = self.fn(e.payload)
         return elems
+
+    def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
+        fn = self.fn
+        cols.keys = [fn(p) for p in cols.payloads]
+        return cols
 
 
 class BatchOp(Operator):
@@ -276,6 +343,16 @@ class _WindowBase(Operator):
                     (e.payload, e.size, e.event_time))
         return []                     # elements leave via on_watermark
 
+    def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
+        """Columnar pane assignment: identical pane contents/order as the
+        per-element path, no Element objects."""
+        panes = self.state["panes"]
+        for p, s, et, k in zip(cols.payloads, cols.sizes,
+                               cols.event_times, cols.keys):
+            for start in self._starts(et):
+                panes.setdefault((k, start), []).append((p, s, et))
+        return ColumnBatch([], [], [])
+
     def on_watermark(self, wm, ctx):
         panes = self.state["panes"]
         due = [kw for kw in panes
@@ -305,6 +382,23 @@ class TumblingWindow(_WindowBase):
 
     def _starts(self, et):
         return [math.floor(et / self.size_s) * self.size_s]
+
+    def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
+        """Vectorized assignment: one ``floor`` pass computes every pane
+        start (``float(math.floor(q)) * w == np.floor(q) * w`` — the
+        same IEEE ops, so pane keys are bit-identical to ``_starts``)."""
+        n = len(cols)
+        if n < 8:
+            return _WindowBase.process_cols(self, cols, ctx)
+        panes = self.state["panes"]
+        starts = (np.floor(
+            np.asarray(cols.event_times, np.float64) / self.size_s)
+            * self.size_s).tolist()
+        for p, s, et, k, start in zip(cols.payloads, cols.sizes,
+                                      cols.event_times, cols.keys,
+                                      starts):
+            panes.setdefault((k, start), []).append((p, s, et))
+        return ColumnBatch([], [], [])
 
 
 class SlidingWindow(_WindowBase):
@@ -434,6 +528,31 @@ class OperatorChain:
                 break
             elems = op.process(elems, ctx)
         return elems
+
+    def process_cols(self, cols: ColumnBatch, ctx: OpContext
+                     ) -> list[Element]:
+        """Columnar execution: run ``process_cols`` fast paths while the
+        stages support them, materialize :class:`Element`\\ s at the
+        first stage that doesn't (the arbitrary-UDF fallback) and finish
+        per-element.  Output equals :meth:`process` over
+        ``cols.elements()`` exactly — stage order, per-payload call
+        order and pane contents are identical; only the per-row object
+        allocations differ."""
+        elems: Optional[list[Element]] = None
+        for op in self.ops:
+            if elems is None:
+                pc = getattr(op, "process_cols", None)
+                if pc is not None:
+                    cols = pc(cols, ctx)
+                    if not len(cols):
+                        return []
+                    continue
+                elems = cols.elements()
+            if not elems:
+                break
+            elems = op.process(elems, ctx)
+        # whatever leaves the chain is emitted as Elements either way
+        return cols.elements() if elems is None else elems
 
     def advance_watermark(self, wm: float, ctx: OpContext
                           ) -> list[Element]:

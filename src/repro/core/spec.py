@@ -97,9 +97,11 @@ class PipelineSpec:
     """The full emulation task description."""
 
     def __init__(self, *, mode: str = "zk",
-                 delivery: str = "wakeup") -> None:
+                 delivery: str = "wakeup", columnar: bool = True,
+                 scheduler: str = "calendar") -> None:
         assert mode in ("zk", "kraft"), mode
         assert delivery in ("wakeup", "poll"), delivery
+        assert scheduler in ("calendar", "heap"), scheduler
         self.hosts: dict[str, HostSpec] = {}
         self.topics: dict[str, TopicCfg] = {}
         self.faults: list[FaultCfg] = []
@@ -108,6 +110,13 @@ class PipelineSpec:
         # subscriber delivery: "wakeup" (event-driven, the fast hot path)
         # or "poll" (legacy fixed-interval loop, kept for parity checks)
         self.delivery = delivery
+        # columnar=True: fetch delivers zero-copy BatchViews; False
+        # materializes per-row Record lists (legacy allocation pattern,
+        # kept for parity checks and the allocation-counter baseline)
+        self.columnar = bool(columnar)
+        # event queue backend: "calendar" (bucketed, the hot path) or
+        # "heap" (legacy global heap) — pop order is bit-identical
+        self.scheduler = scheduler
         self._comp_seq = 0
 
     # ------------------------------------------------------------------
@@ -116,7 +125,8 @@ class PipelineSpec:
 
     @classmethod
     def from_topology(cls, g: "nx.Graph", *, mode: str = "zk",
-                      delivery: str = "wakeup") -> "PipelineSpec":
+                      delivery: str = "wakeup", columnar: bool = True,
+                      scheduler: str = "calendar") -> "PipelineSpec":
         """Build a spec from a generated topology graph.
 
         ``g`` follows the ``repro.sweep.topologies`` contract: nodes carry
@@ -124,7 +134,8 @@ class PipelineSpec:
         ``cfg`` :class:`LinkCfg`.  Components and topics are added on top
         by the caller (or by ``repro.sweep.scenarios.build_scenario``).
         """
-        spec = cls(mode=mode, delivery=delivery)
+        spec = cls(mode=mode, delivery=delivery, columnar=columnar,
+                   scheduler=scheduler)
         for n, attrs in g.nodes(data=True):
             if attrs.get("kind", "host") == "switch":
                 spec.add_switch(n)

@@ -20,6 +20,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core.broker import BatchView, payloads_of
 from repro.core.spec import Component
 from repro.core.subscription import DeliveryLoop
 
@@ -237,17 +238,21 @@ class ConsumerBase(DeliveryLoop):
         self.start_delivery(eng, self.topics)
 
     def on_records(self, eng, records) -> None:
-        nbytes = sum(r.size for r in records)
+        # columnar fast path: O(1) byte accounting off the prefix sums,
+        # payload-pointer access only — no Record materialization
+        if isinstance(records, BatchView):
+            nbytes = records.total_bytes()
+        else:
+            nbytes = sum(r.size for r in records)
         self.n_received += len(records)
         self.bytes_received += nbytes
         cost = (PER_RECORD_S + self.per_record_cost) * len(records) \
             + PER_BYTE_S * nbytes
 
         def _done():
-            for r in records:
-                if isinstance(r.payload, dict) and "unit" in r.payload:
-                    eng.monitor.event(eng.now, "unit_out",
-                                      unit=r.payload["unit"])
+            for p in payloads_of(records):
+                if isinstance(p, dict) and "unit" in p:
+                    eng.monitor.event(eng.now, "unit_out", unit=p["unit"])
             self.handle(eng, records)
 
         self.busy_until = eng.execute_on(self.host, cost, _done)
@@ -266,7 +271,7 @@ class MetricsConsumer(ConsumerBase):
         self.payloads: list = []
 
     def handle(self, eng, records) -> None:
-        self.payloads.extend(r.payload for r in records)
+        self.payloads.extend(payloads_of(records))
 
 
 class CountingConsumer(ConsumerBase):

@@ -11,7 +11,9 @@ experiment-scale workflow:
 - :mod:`repro.sweep.scenarios` — the default params->PipelineSpec
   builder over generated topologies;
 - :mod:`repro.sweep.runner` — :func:`run_sweep`, a parallel runner with
-  per-scenario atomic result caching (interrupted sweeps resume);
+  per-scenario atomic result caching (interrupted sweeps resume) on a
+  warm persistent worker pool (:func:`warm_pool` / :func:`shutdown_pool`
+  — forkserver-preloaded where available, spawn fallback);
 - :mod:`repro.sweep.results` — :class:`SweepResults`, columnar
   aggregation, summary tables and determinism fingerprints.
 
@@ -28,7 +30,9 @@ Quickstart (see ``examples/sweep_quickstart.py``)::
 """
 from repro.sweep.grid import Scenario, SweepSpec, builder_ref, scenario_id
 from repro.sweep.results import SweepResults, TIMING_KEYS
-from repro.sweep.runner import run_sweep
+from repro.sweep.runner import (
+    run_sweep, shutdown_pool, warm_pool, warm_pool_pids,
+)
 from repro.sweep.scenarios import build_scenario
 from repro.sweep.topologies import GENERATORS, generate, hosts_of
 
@@ -36,4 +40,5 @@ __all__ = [
     "SweepSpec", "Scenario", "SweepResults", "run_sweep",
     "build_scenario", "generate", "hosts_of", "GENERATORS",
     "builder_ref", "scenario_id", "TIMING_KEYS",
+    "warm_pool", "shutdown_pool", "warm_pool_pids",
 ]

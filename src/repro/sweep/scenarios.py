@@ -26,6 +26,11 @@ n_keys        > 0 routes producer records over a cycling key space
               (keyed partitioning); 0 = unkeyed round-robin
 poll_interval               subscriber cadence (also the wakeup fallback)
 delivery / mode             "wakeup"|"poll", "zk"|"kraft"
+columnar      zero-copy BatchView delivery (default True); False
+              materializes per-row Records at fetch — the allocation
+              baseline axis (behavior is bit-identical either way)
+scheduler     engine event queue: "calendar" (default) | "heap"
+              (legacy global heap; pop order bit-identical)
 broker_cfg    dict merged into every broker component (Table I brokerCfg)
 loss_pct      uniform extra loss applied to every link
 reach_cache   per-epoch reachability memoization toggle (default on;
@@ -64,7 +69,9 @@ def build_scenario(p: dict) -> PipelineSpec:
         seed=int(p.get("topo_seed", p.get("seed", 0))),
         **dict(p.get("topo", {})))
     spec = PipelineSpec.from_topology(
-        g, mode=p.get("mode", "zk"), delivery=p.get("delivery", "wakeup"))
+        g, mode=p.get("mode", "zk"), delivery=p.get("delivery", "wakeup"),
+        columnar=bool(p.get("columnar", True)),
+        scheduler=p.get("scheduler", "calendar"))
     spec.network.reach_cache = bool(p.get("reach_cache", True))
     if p.get("loss_pct"):
         for a, b in spec.network.g.edges:

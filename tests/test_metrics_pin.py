@@ -16,6 +16,17 @@ the word-count pipeline pins below (engine events + a digest of the
 sink's payload sequence) were captured at the PR 3 head, before
 ``core/spe.py`` was refactored from monolithic ``Query`` subclasses
 into operator chains.
+
+PR 5 (allocation-free delivery): the defaults are now columnar
+``BatchView`` delivery on the calendar-queue scheduler — the original
+pin grids run under those defaults, so PINNED passing at all *is* the
+bit-for-bit proof for the new hot path.  The additional sections pin
+the compat configurations against the same numbers: ``columnar=False``
+(per-row Record materialization, the pre-BatchView delivery pattern)
+and ``scheduler="heap"`` (the pre-calendar global heap) must reproduce
+the identical metrics, sink digests and sweep fingerprints in both
+delivery modes, with only ``record_objects_materialized`` allowed to
+differ between the columnar settings.
 """
 import hashlib
 
@@ -23,6 +34,10 @@ import pytest
 
 from repro.core import Engine, PipelineSpec
 from repro.sweep import SweepSpec, run_sweep
+
+# metrics allowed to differ across the columnar axis (the allocation
+# counter is the measurement, wall clock is never compared)
+ALLOC_KEYS = ("record_objects_materialized", "wall_s")
 
 GRID = SweepSpec(
     name="ci_smoke_pin",
@@ -123,15 +138,68 @@ def test_event_time_fields_are_inert_without_spes(rows):
             assert got[k] == 0, (k, got[k])
 
 
+def test_columnar_path_materializes_no_records(rows):
+    # the default (BatchView) delivery never builds a Record at the
+    # boundary — the allocation win the CI bench gates on
+    for key, got in rows.items():
+        assert got["record_objects_materialized"] == 0, key
+
+
+def _variant_rows(**base_over):
+    grid = SweepSpec(name="ci_smoke_pin_variant", axes=dict(GRID.axes),
+                     base={**GRID.base, **base_over})
+    res = run_sweep(grid, workers=1, cache_dir=None)
+    return {(r["params"]["n_hosts"], r["params"]["delivery"]):
+            r["metrics"] for r in res.rows}
+
+
+@pytest.fixture(scope="module")
+def record_mode_rows():
+    return _variant_rows(columnar=0)
+
+
+@pytest.fixture(scope="module")
+def heap_scheduler_rows():
+    return _variant_rows(scheduler="heap")
+
+
+@pytest.mark.parametrize("key", sorted(PINNED))
+def test_record_mode_reproduces_pins_and_columnar_rows(
+        rows, record_mode_rows, key):
+    got = record_mode_rows[key]
+    for field, want in PINNED[key].items():
+        assert got[field] == want, \
+            f"{key} (record mode): metrics[{field!r}] = {got[field]!r}"
+    # against the columnar run: everything but the allocation counter
+    # (and wall clock) is bit-identical — BatchView delivery reproduces
+    # the pre-refactor behavior exactly, in both delivery modes
+    col = rows[key]
+    assert {k: v for k, v in got.items() if k not in ALLOC_KEYS} == \
+        {k: v for k, v in col.items() if k not in ALLOC_KEYS}
+    assert got["record_objects_materialized"] == got["records_delivered"]
+
+
+@pytest.mark.parametrize("key", sorted(PINNED))
+def test_heap_scheduler_reproduces_calendar_rows(
+        rows, heap_scheduler_rows, key):
+    got = heap_scheduler_rows[key]
+    for field, want in PINNED[key].items():
+        assert got[field] == want, \
+            f"{key} (heap): metrics[{field!r}] = {got[field]!r}"
+    col = rows[key]
+    assert {k: v for k, v in got.items() if k != "wall_s"} == \
+        {k: v for k, v in col.items() if k != "wall_s"}
+
+
 # ---------------------------------------------------------------------------
 # PR 4 pin: processing-time SPE pipeline (pre-operator-graph capture)
 # ---------------------------------------------------------------------------
 
 
-def word_count_spec(delivery):
+def word_count_spec(delivery, columnar=True):
     docs = ["to be or not to be", "be the change", "stream all things",
             "not all who wander are lost"]
-    spec = PipelineSpec(delivery=delivery)
+    spec = PipelineSpec(delivery=delivery, columnar=columnar)
     spec.add_switch("s1")
     for h in ["b", "h1", "h2", "h3", "h4"]:
         spec.add_host(h).add_link(h, "s1", lat=1.0, bw=1000.0)
@@ -168,9 +236,12 @@ SPE_PINNED = {
 SPE_SINK_DIGEST = "f0f84300d0db8d91"
 
 
+@pytest.mark.parametrize("columnar", [True, False],
+                         ids=["batchview", "records"])
 @pytest.mark.parametrize("delivery", sorted(SPE_PINNED))
-def test_processing_time_spe_pipeline_reproduced_exactly(delivery):
-    eng = Engine(word_count_spec(delivery), seed=0)
+def test_processing_time_spe_pipeline_reproduced_exactly(delivery,
+                                                         columnar):
+    eng = Engine(word_count_spec(delivery, columnar), seed=0)
     eng.run(until=20.0)
     got = eng.metrics()
     for field, want in SPE_PINNED[delivery].items():
@@ -186,3 +257,7 @@ def test_processing_time_spe_pipeline_reproduced_exactly(delivery):
     for k in ("windows_fired", "late_records", "checkpoint_count",
               "recovered_duplicates"):
         assert got[k] == 0
+    # the delivery boundary: BatchViews materialize nothing, the record
+    # path pays one Record per delivered row
+    want_mat = 0 if columnar else got["records_delivered"]
+    assert got["record_objects_materialized"] == want_mat

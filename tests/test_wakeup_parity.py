@@ -6,10 +6,20 @@ and zk/kraft loss outcomes must be identical to the legacy polling path.
 Per-client RNG streams (``Engine.client_rng``) make this testable — how
 often a consumer fetches cannot perturb producer schedules or the
 produce-side loss draws.
+
+The columnar section extends the same parity to the **BatchView
+delivery boundary**: zero-copy columnar delivery (``columnar=True``,
+the default) must reproduce the legacy per-row Record path's engine
+event streams, sink payload digests and sweep fingerprints bit-for-bit
+in *both* delivery modes — only the allocation counter may differ.
 """
+import hashlib
+import json
+
 import pytest
 
 from repro.core import Engine, PipelineSpec
+from repro.sweep import SweepSpec, run_sweep
 
 # produce-side / protocol events that must be bit-identical across modes
 PROTOCOL_KINDS = (
@@ -243,6 +253,71 @@ def test_event_time_window_outputs_identical_across_modes():
         "0.6 s jitter over a 0.1 s lateness bound must produce lates"
     assert protocol_events(mon_p) == protocol_events(mon_w)
     assert mw["engine_events"] < mp["engine_events"]
+
+
+# ---------------------------------------------------------------------------
+# Columnar (BatchView) delivery parity — both delivery modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delivery", ["poll", "wakeup"])
+def test_batchview_reproduces_record_delivery_exactly(delivery):
+    """Zero-copy views vs eager Record lists: identical event streams,
+    identical sink digests; only the materialization counter moves."""
+    runs = {}
+    for columnar in (False, True):
+        spec = word_count_spec(delivery)
+        spec.columnar = columnar
+        eng = Engine(spec, seed=0)
+        mon = eng.run(until=20.0)
+        sink = [rt for rt in eng.runtimes
+                if rt.name.startswith("consumer")][0]
+        m = eng.metrics()
+        m.pop("wall_s")
+        mat = m.pop("record_objects_materialized")
+        digest = hashlib.sha256(
+            repr(sink.payloads).encode()).hexdigest()
+        runs[columnar] = (m, list(mon.events), digest, mat)
+    assert runs[False][:3] == runs[True][:3]
+    assert runs[True][3] == 0, "columnar delivery must materialize 0"
+    assert runs[False][3] > 0, "record mode must pay per-row Records"
+
+
+def _fingerprint_without_alloc_axis(res) -> str:
+    """Sweep fingerprint with the columnar knob + counter factored out."""
+    rows = []
+    for r in res.deterministic_rows():
+        r = json.loads(json.dumps(r, default=repr))
+        r.pop("scenario_id")             # hashes the columnar knob too
+        r["params"].pop("columnar", None)
+        r["metrics"].pop("record_objects_materialized", None)
+        rows.append(r)
+    rows.sort(key=lambda r: json.dumps(r["params"], sort_keys=True))
+    return hashlib.sha256(
+        json.dumps(rows, sort_keys=True).encode()).hexdigest()
+
+
+def test_sweep_fingerprints_identical_across_columnar_modes():
+    """The full sweep surface (partitioned, windowed, both deliveries)
+    fingerprints identically under BatchView and Record delivery."""
+    fps = {}
+    for columnar in (0, 1):
+        grid = SweepSpec(
+            name="columnar_parity",
+            axes={"delivery": ["poll", "wakeup"], "partitions": [1, 2]},
+            base={"topology": "star", "n_hosts": 8, "n_brokers": 1,
+                  "n_topics": 2, "n_producers": 2, "rate_kbps": 16.0,
+                  "horizon": 10.0, "windowed": 1, "window_s": 1.0,
+                  "et_jitter_s": 0.5, "seed": 0, "columnar": columnar})
+        res = run_sweep(grid, workers=1, cache_dir=None)
+        fps[columnar] = _fingerprint_without_alloc_axis(res)
+        mats = [r["metrics"]["record_objects_materialized"]
+                for r in res.rows]
+        if columnar:
+            assert all(m == 0 for m in mats)
+        else:
+            assert all(m > 0 for m in mats)
+    assert fps[0] == fps[1]
 
 
 def test_partitioned_groups_parity_across_modes():

@@ -1,0 +1,202 @@
+"""Warm sweep workers + runner contract hardening.
+
+Covers the three runner changes of the allocation-free PR:
+
+- **Warm pool**: one persistent worker pool per process, reused across
+  ``run_sweep`` calls (same worker pids), forkserver-backed where the
+  platform allows with the lazy-JAX guard (workers must come up without
+  JAX imported — forking initialized JAX state is unsafe), spawn
+  fallback otherwise.  The kill-anywhere resume contract is unchanged:
+  a half-deleted cache resumes to an identical fingerprint on the warm
+  pool.
+- **Cache round-trip guard**: params that JSON + ``default=repr``
+  cannot represent faithfully (tuples, sets) must *rerun* rather than
+  silently reload as lists / repr-strings — the degraded values hash to
+  the same content id, so only direct params equality catches them.
+- **Repeats determinism guard**: ``repeats > 1`` must fail loudly if
+  any deterministic metric diverges across repeats.
+"""
+import glob
+import os
+
+import pytest
+
+from repro.sweep import (
+    SweepSpec, run_sweep, shutdown_pool, warm_pool, warm_pool_pids,
+)
+from repro.sweep.runner import _load_cached, _run_one, _worker_probe
+
+
+def tiny_sweep(**base_over) -> SweepSpec:
+    base = {"topology": "star", "n_brokers": 1, "n_topics": 2,
+            "n_producers": 2, "rate_kbps": 16.0, "horizon": 6.0,
+            "seed": 0}
+    base.update(base_over)
+    return SweepSpec(
+        name="warm_tiny",
+        axes={"n_hosts": [6, 8], "delivery": ["poll", "wakeup"]},
+        base=base)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_pool():
+    shutdown_pool()
+    yield
+    shutdown_pool()
+
+
+# ---------------------------------------------------------------------------
+# Warm pool lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_pool_persists_across_sweeps_same_workers():
+    pool = warm_pool(2)
+    pids_before = warm_pool_pids()
+    assert len(pids_before) == 2
+    a = run_sweep(tiny_sweep(), workers=2, cache_dir=None)
+    b = run_sweep(tiny_sweep(seed=1), workers=2, cache_dir=None)
+    assert len(a) == len(b) == 4
+    # still the same pool object and the same live worker processes —
+    # the second sweep paid zero interpreter/numpy startups
+    assert warm_pool(2) is pool
+    assert warm_pool_pids() == pids_before
+    probed = {r["pid"] for r in pool.map(_worker_probe, range(16))}
+    assert probed <= set(pids_before)
+
+
+def test_pool_resizes_to_honor_the_workers_cap():
+    small = warm_pool(1)
+    big = warm_pool(3)
+    assert big is not small
+    assert len(warm_pool_pids()) == 3
+    # a narrower ask must NOT reuse the wider pool: workers is a hard
+    # concurrency cap (memory-heavy grids rely on it), so the pool is
+    # recreated at the exact requested width
+    capped = warm_pool(2)
+    assert capped is not big
+    assert len(warm_pool_pids()) == 2
+    assert warm_pool(2) is capped         # exact match: reused
+
+
+def test_workers_never_import_jax():
+    # the lazy-JAX guard: engine + numpy are preloaded/imported, JAX is
+    # not — SPE queries import it lazily inside the worker only when a
+    # scenario actually needs a jitted computation
+    run_sweep(tiny_sweep(), workers=2, cache_dir=None)
+    probes = warm_pool(2).map(_worker_probe, range(8))
+    assert probes and all(not p["jax_loaded"] for p in probes)
+
+
+def test_warm_pool_resumes_half_deleted_cache(tmp_path):
+    cache = str(tmp_path / "cache")
+    a = run_sweep(tiny_sweep(), workers=2, cache_dir=cache)
+    assert a.n_cached == 0
+    files = sorted(glob.glob(os.path.join(cache, "*.json")))
+    assert len(files) == 4
+    for p in files[:2]:                   # kill half the cache
+        os.remove(p)
+    b = run_sweep(tiny_sweep(), workers=2, cache_dir=cache)
+    assert b.n_cached == 2
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_spawn_fallback_still_works(tmp_path):
+    res = run_sweep(tiny_sweep(), workers=2, mp_context="spawn",
+                    cache_dir=str(tmp_path / "c"))
+    assert len(res) == 4
+    ref = run_sweep(tiny_sweep(), workers=1, cache_dir=None)
+    assert res.fingerprint() == ref.fingerprint()
+
+
+def _boom_builder(params):
+    raise RuntimeError("boom")
+
+
+def test_pool_torn_down_when_a_sweep_fails():
+    # a failing scenario must not leave abandoned tasks running on the
+    # persistent workers (they would stall the next sweep invisibly):
+    # the runner tears the pool down on abnormal exit and the next
+    # warm_pool call starts a fresh one
+    sweep = SweepSpec(name="boom", axes={"n_hosts": [6, 8, 10]},
+                      base={"horizon": 5.0, "seed": 0},
+                      builder=_boom_builder)
+    with pytest.raises(RuntimeError, match="boom"):
+        run_sweep(sweep, workers=2, cache_dir=None)
+    assert warm_pool_pids() == []
+    warm_pool(2)
+    assert len(warm_pool_pids()) == 2     # clean restart afterwards
+
+
+# ---------------------------------------------------------------------------
+# Cache round-trip guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [(1, 2), {"frozen", "set"}],
+                         ids=["tuple", "set"])
+def test_non_json_native_params_rerun_instead_of_degrading(tmp_path, bad):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep(tag=bad)
+    a = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert len(glob.glob(os.path.join(cache, "*.json"))) == 4
+    # the reload would hand back a list / repr-string for `tag`; the
+    # guard must refuse it and rerun rather than serve degraded params
+    b = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert b.n_cached == 0
+    assert all(r["params"]["tag"] == bad for r in b.rows)
+    assert a.fingerprint() == b.fingerprint()
+
+
+def test_json_native_params_still_cache(tmp_path):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep(tag=[1, 2], knobs={"a": 0.1})
+    run_sweep(sweep, workers=1, cache_dir=cache)
+    b = run_sweep(sweep, workers=1, cache_dir=cache)
+    assert b.n_cached == 4                # faithful round trip: reused
+
+
+def test_load_cached_rejects_foreign_scenario_file(tmp_path):
+    cache = str(tmp_path / "cache")
+    sweep = tiny_sweep()
+    run_sweep(sweep, workers=1, cache_dir=cache)
+    scens = sweep.scenarios()
+    # copy scenario 0's row into scenario 1's slot: stale/foreign file
+    src = os.path.join(cache, f"{scens[0].id}.json")
+    dst = os.path.join(cache, f"{scens[1].id}.json")
+    with open(src) as f:
+        blob = f.read()
+    with open(dst, "w") as f:
+        f.write(blob)
+    assert _load_cached(dst, scens[1]) is None
+    assert _load_cached(src, scens[0]) is not None
+
+
+# ---------------------------------------------------------------------------
+# Repeats determinism guard
+# ---------------------------------------------------------------------------
+
+_FLAKY_CALLS = {"n": 0}
+
+
+def _flaky_builder(params):
+    """A builder that (wrongly) varies the pipeline across repeats."""
+    from repro.sweep import build_scenario
+    _FLAKY_CALLS["n"] += 1
+    p = dict(params)
+    p["rate_kbps"] = 16.0 + 8.0 * (_FLAKY_CALLS["n"] % 2)
+    return build_scenario(p)
+
+
+def test_repeats_assert_deterministic_metrics():
+    params = {"topology": "star", "n_hosts": 6, "n_brokers": 1,
+              "n_topics": 1, "n_producers": 1, "rate_kbps": 16.0,
+              "horizon": 5.0, "seed": 0}
+    # healthy builder: repeats agree, row comes back
+    from repro.sweep import build_scenario
+    row = _run_one(("sid", params, build_scenario, 2, None))
+    assert row["metrics"]["records_produced"] > 0
+    # diverging builder: the standing guard must fail loudly
+    _FLAKY_CALLS["n"] = 0
+    with pytest.raises(AssertionError, match="nondeterministic metrics"):
+        _run_one(("sid", params, _flaky_builder, 2, None))
