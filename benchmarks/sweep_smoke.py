@@ -21,6 +21,19 @@ fields; the ``windowed`` axis adds an event-time tumbling-window SPE
 enter the fingerprint: any cross-process nondeterminism in watermark
 propagation or pane firing fails CI here.
 
+``--chaos`` appends a second, independent grid (own cache dir) that
+drives a seeded chaos plan over bounded-queue subscribers across both
+delivery modes and shed policies, gating:
+
+- resume-fingerprint equality on the chaos grid (a seed names one
+  adversarial run, bit-identically, across cache interruption);
+- ``records_shed`` > 0 under the shedding policy and == 0 under pause
+  (backpressure must throttle, never drop);
+- produce-side degradation counters (``produce_retries``,
+  ``chaos_faults``, ``fault_events``) identical across the two delivery
+  modes for otherwise-identical params — the chaos schedule and
+  producer-side protocol randomness must not see the consumer loop.
+
 Exits non-zero on any gate failure; CI runs it on every PR.
 """
 from __future__ import annotations
@@ -36,6 +49,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 from repro.sweep import SweepSpec, run_sweep, warm_pool_pids  # noqa: E402
 
 CACHE = ".ci_sweep"
+CHAOS_CACHE = ".ci_sweep_chaos"
 
 sweep = SweepSpec(
     name="ci_smoke",
@@ -45,6 +59,58 @@ sweep = SweepSpec(
           "n_producers": 2, "rate_kbps": 16.0, "horizon": 10.0,
           "window_s": 1.0, "et_jitter_s": 0.5,
           "checkpoint_interval": 2.0, "seed": 0})
+
+
+chaos_sweep = SweepSpec(
+    name="ci_chaos_smoke",
+    axes={"delivery": ["poll", "wakeup"],
+          "shed_policy": ["pause", "drop_oldest"]},
+    base={"topology": "geo_wan", "n_hosts": 8, "n_brokers": 3,
+          "replication": 3, "n_topics": 2, "n_producers": 2,
+          "rate_kbps": 256.0, "msg_size": 512, "consumer_cost": 0.02,
+          "queue_bytes": 16 << 10, "chaos": 1,
+          "horizon": 6.0, "seed": 0})
+
+
+def chaos_main() -> None:
+    """The --chaos gates: seeded adversarial grid, resumable + split by
+    policy exactly as documented (shed vs throttle), produce side blind
+    to the delivery mode."""
+    shutil.rmtree(CHAOS_CACHE, ignore_errors=True)
+    a = run_sweep(chaos_sweep, workers=2, cache_dir=CHAOS_CACHE,
+                  progress=print)
+    assert len(a) == 4 and a.n_cached == 0
+    for p in sorted(glob.glob(os.path.join(CHAOS_CACHE, "*.json")))[:2]:
+        os.remove(p)
+    b = run_sweep(chaos_sweep, workers=2, cache_dir=CHAOS_CACHE,
+                  progress=print)
+    assert b.n_cached == 2, "chaos resume must reuse the surviving cache"
+    assert a.fingerprint() == b.fingerprint(), \
+        "resumed chaos sweep diverged (shed/fault counters included)"
+    rows = {(r["params"]["delivery"], r["params"]["shed_policy"]):
+            r["metrics"] for r in a.rows}
+    for (delivery, policy), m in sorted(rows.items()):
+        assert m["chaos_faults"] > 0, "chaos plan expanded to nothing"
+        assert m["fault_events"] > 0, "no chaos fault ever applied"
+        if policy == "pause":
+            assert m["records_shed"] == 0, \
+                f"pause policy shed records ({delivery})"
+            assert m["backpressure_pauses"] > 0, \
+                f"overloaded pause grid never paused ({delivery})"
+        else:
+            assert m["records_shed"] > 0, \
+                f"shedding grid point shed nothing ({delivery}/{policy})"
+    for policy in ("pause", "drop_oldest"):
+        mp, mw = rows[("poll", policy)], rows[("wakeup", policy)]
+        for k in ("chaos_faults", "produce_retries", "records_produced"):
+            assert mp[k] == mw[k], \
+                f"{k} differs across delivery modes ({policy}): " \
+                f"{mp[k]} != {mw[k]}"
+    print(a.table())
+    print("chaos smoke ok | shed(drop_oldest/wakeup):",
+          rows[("wakeup", "drop_oldest")]["records_shed"],
+          "| pauses(pause/wakeup):",
+          rows[("wakeup", "pause")]["backpressure_pauses"])
 
 
 def main() -> None:
@@ -72,4 +138,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--chaos" in sys.argv[1:]:
+        chaos_main()
+    else:
+        main()

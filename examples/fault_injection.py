@@ -1,12 +1,27 @@
-"""Fault injection: reproduce the paper's Fig. 6 partition analysis.
+"""Fault injection: reproduce the paper's Fig. 6 partition analysis,
+plus a seeded chaos-plan walkthrough.
 
     PYTHONPATH=src python examples/fault_injection.py [--mode zk|kraft]
+    PYTHONPATH=src python examples/fault_injection.py --chaos [--seed N]
+            [--queue-bytes B --shed pause|drop_oldest|drop_newest|sample]
 
-Six broker sites in a star topology replicate two topics; the leader of
-topicA is disconnected for 60 s.  In zk mode the co-located producer's
-topicA messages are silently lost via divergent-log truncation; in kraft
-mode producers buffer and re-deliver after the heal.  The delivery
-matrix, latency spikes and leadership events are printed.
+Default run: six broker sites in a star topology replicate two topics;
+the leader of topicA is disconnected for 60 s.  In zk mode the
+co-located producer's topicA messages are silently lost via
+divergent-log truncation; in kraft mode producers buffer and re-deliver
+after the heal.  The delivery matrix, latency spikes and leadership
+events are printed.
+
+``--chaos`` swaps the single hand-placed fault for a *chaos plan*: one
+``spec.set_chaos(...)`` call names how much adversity to inject
+(flapping links, a correlated host partition, gray loss ramps, a slow
+broker, crash/heal cycles) and the engine expands it into a concrete
+schedule from the dedicated ``client_rng("chaos")`` stream — rerun with
+the same seed and the printed schedule is bit-identical; change the
+seed and a different adversarial run unfolds.  Pass ``--queue-bytes``
+to bound consumer ingest queues and watch backpressure pauses (default
+``pause`` policy) or load shedding (``--shed drop_oldest`` etc.) under
+the same chaos.
 """
 import argparse
 import os
@@ -20,13 +35,14 @@ from repro.core import Engine, PipelineSpec
 
 FAULT_AT, FAULT_LEN, HORIZON = 60.0, 60.0, 250.0
 
+FAULT_KINDS_SHOWN = ("link_down", "link_up", "host_down", "host_up",
+                     "gray_loss", "slow_host", "leader_elected",
+                     "preferred_leader_restored")
 
-def main() -> None:
-    p = argparse.ArgumentParser()
-    p.add_argument("--mode", default="zk", choices=["zk", "kraft"])
-    args = p.parse_args()
 
-    spec = PipelineSpec(mode=args.mode)
+def build_spec(mode: str, *, chaos: bool, queue_bytes: int,
+               shed: str) -> PipelineSpec:
+    spec = PipelineSpec(mode=mode)
     spec.add_switch("s1")
     sites = [f"site{i}" for i in range(1, 7)]
     for h in sites:
@@ -35,15 +51,45 @@ def main() -> None:
         spec.add_broker(h)
     spec.add_topic("topicA", leader="site1", replication=3)
     spec.add_topic("topicB", leader="site2", replication=3)
+    bounded = ({"queueBytes": queue_bytes, "shedPolicy": shed}
+               if queue_bytes > 0 else {})
     for h in sites:
         spec.add_producer(h, "SYNTHETIC", topics=["topicA", "topicB"],
                           rateKbps=30.0, msgSize=512)
         spec.add_consumer(h, "STANDARD", topics=["topicA", "topicB"],
-                          pollInterval=0.5)
-    spec.add_fault(FAULT_AT, "link_down", "site1", "s1",
-                   duration=FAULT_LEN)
+                          pollInterval=0.5, **bounded)
+    if chaos:
+        # one call names the whole adversarial run: two flapping links,
+        # one correlated (all-links) host partition, a gray loss ramp,
+        # one slow broker and a crash/heal cycle, spread over the middle
+        # 70% of the horizon; topicA/topicB leaders are protected so the
+        # plan exercises replicas and consumers, not just elections
+        spec.set_chaos(start=0.15 * HORIZON, duration=0.7 * HORIZON,
+                       flap_links=2, correlated=1, gray=1, slow=1,
+                       crashes=1, crash_downtime_s=20.0,
+                       protect=("site1", "site2"))
+    else:
+        spec.add_fault(FAULT_AT, "link_down", "site1", "s1",
+                       duration=FAULT_LEN)
+    return spec
 
-    eng = Engine(spec, seed=7)
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--mode", default="zk", choices=["zk", "kraft"])
+    p.add_argument("--chaos", action="store_true",
+                   help="seeded chaos plan instead of the Fig. 6 fault")
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--queue-bytes", type=int, default=0,
+                   help="bound consumer ingest queues (0 = unbounded)")
+    p.add_argument("--shed", default="pause",
+                   choices=["pause", "drop_oldest", "drop_newest",
+                            "sample"])
+    args = p.parse_args()
+
+    spec = build_spec(args.mode, chaos=args.chaos,
+                      queue_bytes=args.queue_bytes, shed=args.shed)
+    eng = Engine(spec, seed=args.seed)
     mon = eng.run(until=HORIZON)
 
     consumers = eng.consumers_named()
@@ -51,17 +97,26 @@ def main() -> None:
                                       topic="topicA")
     lost_cols = [i for i in range(len(ids))
                  if not all(row[i] for row in matrix)]
-    print(f"mode={args.mode}")
+    print(f"mode={args.mode} chaos={args.chaos} seed={args.seed}")
     print(f"topicA messages from the co-located producer: {len(ids)}; "
           f"lost: {len(lost_cols)}")
     lats = [l for _, l in mon.latencies(topic="topicB")]
     print(f"topicB latency: median {np.median(lats):.3f}s, "
           f"max {max(lats):.1f}s (delayed, not lost)")
     for e in mon.events:
-        if e["kind"] in ("link_down", "leader_elected", "link_up",
-                        "preferred_leader_restored"):
+        if e["kind"] in FAULT_KINDS_SHOWN:
             info = {k: v for k, v in e.items() if k not in ("t", "kind")}
             print(f"  t={e['t']:7.1f}s  {e['kind']:26s} {info}")
+    if args.chaos:
+        m = eng.metrics()
+        print(f"chaos faults scheduled: {m['chaos_faults']}; "
+              f"fault events fired: {m['fault_events']}")
+        print(f"degradation: produce_retries={m['produce_retries']} "
+              f"produce_expired={m['produce_expired']} "
+              f"records_shed={m['records_shed']} "
+              f"backpressure_pauses={m['backpressure_pauses']} "
+              f"pause_seconds={m['pause_seconds']:.3f} "
+              f"queue_peak_bytes={m['queue_peak_bytes']}")
 
 
 if __name__ == "__main__":

@@ -254,6 +254,25 @@ class RecordBatch:
         n = min(hi - lo, k + 1)
         return n, int(self.cum_size[lo + n - 1]) - base
 
+    def take_within_bytes(self, lo: int, hi: int, max_bytes: int
+                          ) -> tuple[int, int]:
+        """Strict byte-capped prefix of rows [lo, hi).
+
+        Unlike :meth:`take_by_bytes`, the row crossing the cap is
+        *excluded* — the returned bytes never exceed ``max_bytes``.
+        Backpressure fetch budgets use this so a bounded subscriber
+        queue provably never exceeds its configured bound.
+        """
+        if hi <= lo:
+            return 0, 0
+        base = int(self.cum_size[lo - 1]) if lo else 0
+        k = int(np.searchsorted(self.cum_size[lo:hi], base + max_bytes,
+                                side="right"))
+        n = min(hi - lo, k)
+        if n == 0:
+            return 0, 0
+        return n, int(self.cum_size[lo + n - 1]) - base
+
     def copy_from(self, other: "RecordBatch") -> None:
         """Become an exact copy of ``other`` (payload objects shared)."""
         self.n = other.n
@@ -387,6 +406,19 @@ class BatchView:
     def _count(self, n: int) -> None:
         if self._counter is not None:
             self._counter.n_records_materialized += n
+
+    def subview(self, lo: int, hi: int) -> "BatchView":
+        """A narrower view over view-relative rows [lo, hi) — no copy,
+        no Record materialization (load shedding keeps contiguous runs
+        of an already-delivered view through this)."""
+        v = BatchView.__new__(BatchView)
+        for s in BatchView.__slots__:
+            setattr(v, s, getattr(self, s))
+        v.lo = self.lo + max(0, lo)
+        v.hi = min(self.hi, self.lo + hi)
+        v._payloads = None
+        v._keys = None
+        return v
 
     def record_at(self, i: int) -> Record:
         """Materialize view row ``i`` (0-based within the view)."""
@@ -629,6 +661,13 @@ class Cluster:
         self._msg_seq = 0
         self._batch_seq = 0
         self.n_produce_batches = 0      # flushed batches (produce requests)
+        # degradation observability (fingerprinted via Engine.metrics):
+        # produce-path retries (backoff reschedules + NOT_LEADER bounces)
+        # and batches expired past delivery_timeout.  Both live on the
+        # produce path, which draws only producer-side RNG streams, so
+        # they are bit-identical across delivery modes.
+        self.n_produce_retries = 0
+        self.n_produce_expired = 0
         # delivery-boundary Record materializations (deterministic; the
         # columnar BatchView path keeps this at ~0, the legacy record
         # path pays one per delivered row — see Engine.metrics)
@@ -903,6 +942,7 @@ class Cluster:
                 self._attempt_produce(q[0])
 
     def _retry_later(self, bid: int) -> None:
+        self.n_produce_retries += 1
         h = self.engine.schedule(
             self.cfg["retry_backoff"] + self.cfg["request_timeout"],
             lambda: self._attempt_produce(bid))
@@ -922,6 +962,7 @@ class Cluster:
         if q and q[0] != bid:
             return          # not the head: resent when the head finishes
         if now - pend.first_attempt > self.cfg["delivery_timeout"]:
+            self.n_produce_expired += 1
             for rec in pend.records:
                 eng.monitor.expired(rec, now)   # producer gives up
             del self._pending[bid]
@@ -957,6 +998,7 @@ class Cluster:
         believes, bepoch = self._belief[(broker, topic, part)]
         if not believes:
             # NOT_LEADER response: refresh metadata and retry
+            self.n_produce_retries += 1
             self._invalidate_client(pend.producer, topic, part)
             pend.retry_handle = eng.schedule(
                 self.cfg["retry_backoff"],
@@ -1141,12 +1183,38 @@ class Cluster:
         if off >= log.hw:
             return FETCH_EMPTY
         # fetch.max.bytes: cap one response (remainder on the next fetch)
-        n, nbytes = log.batch.take_by_bytes(off, log.hw,
-                                            self.cfg["fetch_bytes"])
+        cap = self.cfg["fetch_bytes"]
+        # backpressure: a bounded subscriber (pause policy) advertises
+        # its remaining ingest-queue budget; the take is then *strict*
+        # (crossing row excluded) so delivered-plus-queued bytes provably
+        # stay within the configured bound.  budget=None — the default —
+        # takes the branch below, byte-identical to the legacy path.
+        budget = getattr(consumer, "fetch_budget", lambda: None)()
+        if budget is None:
+            n, nbytes = log.batch.take_by_bytes(off, log.hw, cap)
+        else:
+            n, nbytes = log.batch.take_within_bytes(
+                off, log.hw, min(cap, budget))
+            if n == 0:
+                if consumer.queue_empty():
+                    # a single record larger than the bound: deliver it
+                    # anyway rather than deadlock (documented overshoot)
+                    n, nbytes = log.batch.take_by_bytes(
+                        off, log.hw, min(cap, budget))
+                else:
+                    # committed rows remain but the budget cannot admit
+                    # the next one: flag the subscriber starved so its
+                    # loop parks in the paused state (drain-side resume)
+                    # instead of busy-polling zero-row fetches; report
+                    # byte-capped so no waiter is parked either way
+                    consumer.bp_starve()
+                    return FETCH_DELIVERED_MORE
         delay, lost = eng.net.transfer(leader, chost, nbytes, rng)
         if delay is None or lost:
             return FETCH_BLOCKED
         self._consumer_offsets[okey] = off + n
+        if budget is not None:
+            consumer.bp_reserve(nbytes)
         eng.monitor.broker_tx(leader, nbytes)
         # the zero-copy delivery boundary: a BatchView over the fetched
         # rows (stable under later log mutations — see BatchView).  The

@@ -130,6 +130,9 @@ class Engine:
         self.n_events = 0               # events actually executed
         self.n_scheduled = 0            # events pushed onto the heap
         self.n_cancelled = 0            # events skipped via lazy deletion
+        # chaos: number of concrete faults an (optional) chaos plan
+        # expanded into at install time (faults_mod.install sets it)
+        self.n_chaos_faults = 0
 
         self.hosts = {
             h.name: HostRuntime(h.name, h.n_cores, h.cpu_percentage)
@@ -320,6 +323,26 @@ class Engine:
         emits = mon.events_of("window_emit")
         distinct_windows = {(e["spe"], e["key"], e["start"], e["end"])
                             for e in emits}
+        # degradation observability: backpressure / shedding aggregates
+        # over the subscriber runtimes, plus produce-path retry/expiry
+        # counters and fault-schedule totals.  All read zero at the
+        # defaults (unbounded queues, no faults), so pre-existing pins
+        # are unaffected; all join the sweep fingerprint automatically.
+        shed = pauses = bytes_shed = q_peak = 0
+        pause_s = 0.0
+        for rt in self.runtimes:
+            if not hasattr(rt, "n_shed"):
+                continue
+            shed += rt.n_shed
+            bytes_shed += rt.bytes_shed
+            pauses += rt.n_pauses
+            pause_s += rt.pause_s
+            q_peak = max(q_peak, rt._q_peak)
+            # pauses still open at the horizon close against run end
+            pause_s += sum(self.now - t0 for t0 in rt._bp_paused.values())
+        fault_events = sum(
+            len(mon.events_of(k))
+            for k in ("link_down", "host_down", "gray_loss", "slow_host"))
         return {
             "sim_s": self.now,
             "wall_s": wall_s,
@@ -347,6 +370,19 @@ class Engine:
                              if gs.explicit}),
             "group_rebalances": len(mon.events_of("group_rebalance")),
             "produce_batches": cluster.n_produce_batches,
+            # produce-path degradation: retries (leader unknown/electing/
+            # moved) and delivery-timeout expiries, counted per batch.
+            # Producer-side only — bit-identical across delivery modes.
+            "produce_retries": cluster.n_produce_retries,
+            "produce_expired": cluster.n_produce_expired,
+            # chaos / backpressure / shedding (0 at the defaults)
+            "chaos_faults": self.n_chaos_faults,
+            "fault_events": fault_events,
+            "records_shed": shed,
+            "bytes_shed": bytes_shed,
+            "backpressure_pauses": pauses,
+            "pause_seconds": round(pause_s, 9),
+            "queue_peak_bytes": q_peak,
             # Record dataclasses materialized at the delivery boundary:
             # ~0 on the columnar (BatchView) path, one per delivered row
             # with spec.columnar=False — deterministic, so CI gates the

@@ -71,6 +71,11 @@ class Network:
     def __init__(self) -> None:
         self.g = nx.Graph()
         self._host_up: dict[str, bool] = {}
+        # gray degradation: per-host extra transfer delay (slow-broker
+        # ack model).  Empty in healthy runs — the hot path pays one
+        # falsy check and reachability/routing are untouched, so no
+        # epoch bump is needed when a host slows down or recovers.
+        self.slow_extra_s: dict[str, float] = {}
         self.reach_cache = True     # per-epoch memoization toggle
         self.epoch = 0              # bumps on every topology transition
         self._live: Optional[nx.Graph] = None
@@ -116,6 +121,14 @@ class Network:
     def set_host_up(self, name: str, up: bool) -> None:
         self._host_up[name] = up
         self._invalidate()
+
+    def set_host_slow(self, name: str, extra_s: float) -> None:
+        """Gray-degrade a host: every transfer touching it as an endpoint
+        pays ``extra_s`` additional delay (0 clears the degradation)."""
+        if extra_s > 0:
+            self.slow_extra_s[name] = extra_s
+        else:
+            self.slow_extra_s.pop(name, None)
 
     def host_up(self, name: str) -> bool:
         return self._host_up.get(name, False)
@@ -191,6 +204,9 @@ class Network:
             bw = min(bw, cfg.bw_Bps)
             keep *= 1.0 - cfg.loss_pct / 100.0
         delay = lat + (nbytes / bw if bw < math.inf else 0.0)
+        if self.slow_extra_s:
+            delay += (self.slow_extra_s.get(src, 0.0)
+                      + self.slow_extra_s.get(dst, 0.0))
         lost = bool(rng and rng.random() > keep)
         return delay, lost
 

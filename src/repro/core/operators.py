@@ -43,6 +43,55 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 
+def shed_keep(sizes: list, space: int, policy: str
+              ) -> tuple[str, Any, int]:
+    """Load shedding: which rows of an over-budget batch to keep.
+
+    ``sizes`` are the per-row byte sizes, ``space`` the remaining queue
+    budget.  Returns ``(kind, sel, kept_bytes)``:
+
+    - ``("slice", (lo, hi), kb)`` for the contiguous policies —
+      ``drop_newest`` keeps the longest fitting prefix, ``drop_oldest``
+      the longest fitting suffix;
+    - ``("indices", [i, ...], kb)`` for ``sample`` — an evenly spread
+      selection chosen by a byte-ratio accumulator (keep a row whenever
+      doing so keeps kept/total ≤ space/batch), **pure integer
+      arithmetic, no RNG**, so shed decisions are bit-identical across
+      processes and never perturb any client RNG stream.
+
+    The kept bytes never exceed ``space``; callers account them against
+    the queue bound.
+    """
+    n = len(sizes)
+    if policy == "drop_newest":
+        k = kb = 0
+        for s in sizes:
+            if kb + s > space:
+                break
+            k += 1
+            kb += s
+        return "slice", (0, k), kb
+    if policy == "drop_oldest":
+        k = kb = 0
+        for s in reversed(sizes):
+            if kb + s > space:
+                break
+            k += 1
+            kb += s
+        return "slice", (n - k, n), kb
+    if policy == "sample":
+        nb = sum(sizes)
+        keep: list[int] = []
+        kb = tot = 0
+        for i, s in enumerate(sizes):
+            tot += s
+            if kb + s <= space and (kb + s) * nb <= space * tot:
+                keep.append(i)
+                kb += s
+        return "indices", keep, kb
+    raise ValueError(f"unknown shed policy {policy!r}")
+
+
 def jit_bucket(n: int, min_bucket: int = 16) -> int:
     """Pad a batch length to its power-of-two bucket.
 

@@ -8,7 +8,7 @@ built programmatically (the tests' and examples' preferred path).
 
 Supported attributes mirror the paper's Table I:
 
-graph:  topicCfg, faultCfg
+graph:  topicCfg, faultCfg, chaosCfg (seed-expanded fault plans)
 node:   prodType/prodCfg, consType/consCfg, streamProcType/streamProcCfg,
         storeType/storeCfg, brokerCfg, cpuPercentage
 link:   lat (ms), bw (Mbps), loss (%), st, dt (ports)
@@ -77,9 +77,70 @@ class FaultCfg:
 
     at: float                       # seconds into the run
     kind: str                       # link_down | host_down | gray_loss
+                                    # | slow_host
     target: tuple[str, ...]         # (a, b) for links, (host,) for hosts
     duration: float = 0.0           # 0 = permanent
     loss_pct: float = 0.0           # for gray_loss
+    delay_s: float = 0.0            # for slow_host (extra transfer delay)
+
+
+FAULT_KINDS = ("link_down", "host_down", "gray_loss", "slow_host")
+
+
+@dataclass
+class ChaosCfg:
+    """A seed-expanded adversarial fault plan.
+
+    Instead of hand-placing individual :class:`FaultCfg` entries, a chaos
+    plan names *how much* adversity to inject over a time window;
+    ``core/faults.py`` expands it into a concrete fault schedule drawn
+    from the dedicated ``Engine.client_rng("chaos")`` stream at install
+    time.  The expansion draws in a fixed category order (flapping →
+    correlated → gray → slow → crash) over sorted candidate lists, so a
+    single (spec, seed) pair names an entire adversarial run
+    bit-identically across processes, schedulers and delivery modes.
+
+    Categories (each ``0`` = disabled, the default — a default plan
+    expands to nothing and perturbs no RNG stream):
+
+    flap_links    links that flap down/up on a duty cycle for the whole
+                  window (``flap_period_s`` × ``flap_duty`` down-time)
+    correlated    events taking ALL links of one host down at once —
+                  rack/tier failures; access-tier (non-core) hosts are
+                  preferred when the topology carries a ``geo_wan``
+                  core/access split (``PipelineSpec.core_hosts``)
+    gray          gray-degradation ramps: ``gray_steps`` overlapping
+                  ``gray_loss`` faults stepping up to
+                  ``gray_max_loss_pct`` on one link
+    slow          slow-host (degraded ack) episodes: ``slow_delay_s``
+                  extra transfer delay on every path touching the host
+    crashes       host crash/heal cycles (``crash_downtime_s`` outage)
+
+    ``protect`` names hosts never crashed or slowed (e.g. brokers when
+    only edge adversity is wanted).
+    """
+
+    start: float = 0.0
+    duration: float = 0.0           # plan window; > 0 when any count set
+    flap_links: int = 0
+    flap_period_s: float = 4.0
+    flap_duty: float = 0.5          # fraction of each period spent down
+    correlated: int = 0
+    correlated_duration_s: float = 2.0
+    gray: int = 0
+    gray_max_loss_pct: float = 40.0
+    gray_steps: int = 3
+    gray_step_s: float = 2.0
+    slow: int = 0
+    slow_delay_s: float = 0.05
+    slow_duration_s: float = 4.0
+    crashes: int = 0
+    crash_downtime_s: float = 2.0
+    protect: tuple = ()
+
+    def counts(self) -> tuple[int, ...]:
+        return (self.flap_links, self.correlated, self.gray, self.slow,
+                self.crashes)
 
 
 @dataclass
@@ -105,6 +166,12 @@ class PipelineSpec:
         self.hosts: dict[str, HostSpec] = {}
         self.topics: dict[str, TopicCfg] = {}
         self.faults: list[FaultCfg] = []
+        # seed-expanded adversarial plan (None = no chaos; see ChaosCfg)
+        self.chaos: Optional[ChaosCfg] = None
+        # core-tier site names carried from a geo_wan topology's
+        # core/access split (empty otherwise) — chaos correlated
+        # failures prefer access-tier hosts
+        self.core_hosts: list[str] = []
         self.network = Network()
         self.mode = mode            # broker coordination: ZooKeeper vs KRaft
         # subscriber delivery: "wakeup" (event-driven, the fast hot path)
@@ -148,6 +215,9 @@ class PipelineSpec:
             spec.add_link(a, b, lat=cfg.lat_ms, bw=cfg.bw_mbps,
                           loss=cfg.loss_pct, st=cfg.src_port,
                           dt=cfg.dst_port)
+        # geo_wan publishes its core-tier sites on the graph; carry them
+        # so chaos plans can target the access tier for correlated faults
+        spec.core_hosts = list(g.graph.get("core", []))
         return spec
 
     def add_host(self, name: str, *, n_cores: int = 8,
@@ -200,10 +270,17 @@ class PipelineSpec:
         return self
 
     def add_fault(self, at: float, kind: str, *target: str,
-                  duration: float = 0.0, loss_pct: float = 0.0
-                  ) -> "PipelineSpec":
+                  duration: float = 0.0, loss_pct: float = 0.0,
+                  delay_s: float = 0.0) -> "PipelineSpec":
         self.faults.append(FaultCfg(at, kind, tuple(target), duration,
-                                    loss_pct))
+                                    loss_pct, delay_s))
+        return self
+
+    def set_chaos(self, **kw) -> "PipelineSpec":
+        """Attach a seed-expanded adversarial plan (see :class:`ChaosCfg`)."""
+        if "protect" in kw:
+            kw["protect"] = tuple(kw["protect"])
+        self.chaos = ChaosCfg(**kw)
         return self
 
     # ------------------------------------------------------------------
@@ -281,12 +358,66 @@ class PipelineSpec:
                     f"spe {c.name}: exactly_once requires "
                     f"timeMode='event' (processing-time emissions are "
                     f"not held for the checkpoint commit)")
+        # fail fast on typo'd fault targets: a nonexistent link or host
+        # would otherwise surface mid-run as a KeyError deep in netem
         for f in self.faults:
-            if f.kind == "link_down" and len(f.target) != 2:
-                problems.append(f"fault {f}: link_down needs (a, b)")
-            for n in f.target:
-                if n not in self.network.g:
-                    problems.append(f"fault {f}: unknown node {n}")
+            if f.kind not in FAULT_KINDS:
+                problems.append(
+                    f"fault {f}: unknown kind {f.kind!r} "
+                    f"(one of {', '.join(FAULT_KINDS)})")
+                continue
+            unknown = [n for n in f.target if n not in self.network.g]
+            if unknown:
+                problems.append(
+                    f"fault {f}: unknown node(s) {', '.join(unknown)}")
+                continue
+            if f.kind in ("link_down", "gray_loss"):
+                if len(f.target) != 2:
+                    problems.append(f"fault {f}: {f.kind} needs (a, b)")
+                elif not self.network.g.has_edge(*f.target):
+                    problems.append(
+                        f"fault {f}: no link between "
+                        f"{f.target[0]} and {f.target[1]}")
+            else:                       # host_down | slow_host
+                if len(f.target) != 1:
+                    problems.append(f"fault {f}: {f.kind} needs one host")
+            if f.kind == "gray_loss" and not 0.0 <= f.loss_pct <= 100.0:
+                problems.append(
+                    f"fault {f}: loss_pct must be in [0, 100]")
+            if f.kind == "slow_host" and f.delay_s < 0:
+                problems.append(f"fault {f}: delay_s must be >= 0")
+        ch = self.chaos
+        if ch is not None:
+            if any(c < 0 for c in ch.counts()):
+                problems.append("chaos: category counts must be >= 0")
+            if any(ch.counts()) and ch.duration <= 0:
+                problems.append(
+                    "chaos: an active plan needs duration > 0")
+            if ch.flap_links and not (0.0 < ch.flap_duty <= 1.0
+                                      and ch.flap_period_s > 0):
+                problems.append(
+                    "chaos: flapping needs flap_duty in (0, 1] and "
+                    "flap_period_s > 0")
+            if not 0.0 <= ch.gray_max_loss_pct <= 100.0:
+                problems.append(
+                    "chaos: gray_max_loss_pct must be in [0, 100]")
+            if ch.gray and (ch.gray_steps < 1 or ch.gray_step_s <= 0):
+                problems.append(
+                    "chaos: gray ramps need gray_steps >= 1 and "
+                    "gray_step_s > 0")
+            unknown = [h for h in ch.protect if h not in self.network.g]
+            if unknown:
+                problems.append(
+                    f"chaos: protect names unknown host(s) "
+                    f"{', '.join(unknown)}")
+            if (ch.flap_links or ch.correlated or ch.gray) \
+                    and not self.network.g.edges:
+                problems.append("chaos: no links to degrade")
+            if (ch.slow or ch.crashes) and not any(
+                    h not in ch.protect for h in self.hosts):
+                problems.append(
+                    "chaos: slow/crash categories need at least one "
+                    "unprotected component host")
         for name, h in self.hosts.items():
             if brokers and h.components and not any(
                     self.network.reachable(name, b) for b in brokers):
@@ -340,7 +471,11 @@ def from_graphml(path: str, *, mode: Optional[str] = None,
             spec.add_fault(
                 float(f["at"]), f["kind"], *f.get("target", []),
                 duration=float(f.get("duration", 0)),
-                loss_pct=float(f.get("loss", 0)))
+                loss_pct=float(f.get("loss", 0)),
+                delay_s=float(f.get("delay", 0)))
+    if "chaosCfg" in g.graph:
+        # graph-level chaos plan: YAML keys mirror ChaosCfg fields
+        spec.set_chaos(**_load_cfg(g.graph["chaosCfg"], base))
 
     for node, attrs in g.nodes(data=True):
         has_comp = any(k in attrs for k in (

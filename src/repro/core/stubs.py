@@ -238,22 +238,31 @@ class ConsumerBase(DeliveryLoop):
         self.start_delivery(eng, self.topics)
 
     def on_records(self, eng, records) -> None:
+        # load shedding happens at admission (offsets already advanced,
+        # so shed rows are consumed-but-dropped, never replayed); a
+        # no-op for the default unbounded / pause configurations
+        records = self.bp_admit(eng, records)
         # columnar fast path: O(1) byte accounting off the prefix sums,
         # payload-pointer access only — no Record materialization
         if isinstance(records, BatchView):
             nbytes = records.total_bytes()
         else:
             nbytes = sum(r.size for r in records)
+        if self.queue_bytes_max > 0 and not len(records):
+            return      # whole batch shed
         self.n_received += len(records)
         self.bytes_received += nbytes
         cost = (PER_RECORD_S + self.per_record_cost) * len(records) \
             + PER_BYTE_S * nbytes
+        ep = self._bp_epoch
 
         def _done():
             for p in payloads_of(records):
                 if isinstance(p, dict) and "unit" in p:
                     eng.monitor.event(eng.now, "unit_out", unit=p["unit"])
             self.handle(eng, records)
+            if self.queue_bytes_max > 0:
+                self.bp_drain(eng, nbytes, ep)
 
         self.busy_until = eng.execute_on(self.host, cost, _done)
 

@@ -33,8 +33,9 @@ the processing completes (``_busy_horizon``).
 from __future__ import annotations
 
 from repro.core.broker import (
-    FETCH_DELIVERED, FETCH_DELIVERED_MORE, FETCH_EMPTY,
+    FETCH_DELIVERED, FETCH_DELIVERED_MORE, FETCH_EMPTY, BatchView,
 )
+from repro.core.operators import shed_keep
 
 
 class DeliveryLoop:
@@ -64,6 +65,21 @@ class DeliveryLoop:
         self.group = comp.get("group")
         self.poll_interval = float(comp.get("pollInterval", 0.1))
         self.busy_until = 0.0
+        # backpressure / load shedding (0 = unbounded, the default — in
+        # that case every bp_* hook below is a no-op and the delivery
+        # loop is byte- and event-identical to the unbounded build)
+        self.queue_bytes_max = int(comp.get("queueBytes", 0))
+        self.shed_policy = str(comp.get("shedPolicy", "pause"))
+        self._q_used = 0            # bytes admitted but not yet processed
+        self._q_peak = 0
+        self.n_shed = 0
+        self.bytes_shed = 0
+        self.n_pauses = 0
+        self.pause_s = 0.0
+        self._bp_paused: dict = {}  # loop key -> pause start time
+        self._bp_epoch = 0          # bumps on reset; stale drains ignored
+        self._bp_starved = False    # broker found rows the budget can't
+                                    # admit: pause instead of busy-poll
 
     def start_delivery(self, eng, topics) -> None:
         topics = list(topics)
@@ -83,15 +99,140 @@ class DeliveryLoop:
         """Time until which fetches must be deferred (0 = never busy)."""
         return getattr(self, "busy_until", 0.0)
 
+    # -- backpressure / load shedding ----------------------------------
+    #
+    # A bounded subscriber (``queueBytes > 0``) accounts every admitted
+    # byte in ``_q_used`` and drains it when the batch finishes
+    # processing.  Under the default ``pause`` policy the *fetch side*
+    # is throttled: ``fetch_budget`` caps the broker's take (strict —
+    # never overshoots, except for a single record larger than the whole
+    # bound) and a full queue parks the delivery loop in a third state —
+    # paused — replacing both the scheduled-event and the cluster-waiter
+    # legs of the invariant; ``bp_drain`` resumes it with a zero-delay
+    # fetch.  Shed policies instead fetch normally and drop at
+    # *admission*: offsets have already advanced, so shed rows are
+    # consumed-but-dropped and never replayed, and the bounded queue
+    # never touches rows that were delivered downstream.
+
+    def fetch_budget(self):
+        """Remaining ingest-queue bytes, or None when unthrottled."""
+        if self.queue_bytes_max > 0 and self.shed_policy == "pause":
+            return self.queue_bytes_max - self._q_used
+        return None
+
+    def queue_empty(self) -> bool:
+        return self._q_used <= 0
+
+    def bp_reserve(self, nbytes: int) -> None:
+        """Account bytes taken by the broker on our behalf (pause
+        policy: the reservation covers in-flight + queued bytes)."""
+        if self.queue_bytes_max > 0 and self.shed_policy == "pause":
+            self._q_used += nbytes
+            if self._q_used > self._q_peak:
+                self._q_peak = self._q_used
+
+    def _bp_full(self) -> bool:
+        return (self.queue_bytes_max > 0 and self.shed_policy == "pause"
+                and self._q_used >= self.queue_bytes_max)
+
+    def bp_starve(self) -> None:
+        """Broker callback: data is committed but the remaining budget
+        cannot admit the next record — the loop should pause."""
+        self._bp_starved = True
+
+    def _bp_pause(self, eng, key) -> None:
+        if key not in self._bp_paused:
+            self._bp_paused[key] = eng.now
+            self.n_pauses += 1
+
+    def bp_drain(self, eng, nbytes: int, epoch=None) -> None:
+        """Release queue bytes after processing; resume paused loops."""
+        if epoch is not None and epoch != self._bp_epoch:
+            return      # reserved before a reset: already zeroed
+        self._q_used = max(0, self._q_used - nbytes)
+        if self._bp_paused and self._q_used < self.queue_bytes_max:
+            self._bp_resume(eng)
+
+    def _bp_resume(self, eng) -> None:
+        paused, self._bp_paused = self._bp_paused, {}
+        for key, since in paused.items():
+            self.pause_s += eng.now - since
+            if isinstance(key, tuple):      # poll mode: whole topic list
+                eng.schedule(0.0, lambda k=key: self._poll(eng, list(k)))
+            else:                           # wakeup mode: one topic
+                eng.schedule(0.0,
+                             lambda k=key: self._fetch_once(eng, k))
+
+    def bp_reset(self, eng) -> None:
+        """Host crash: queued-but-unprocessed bytes die with the host."""
+        self._bp_epoch += 1
+        self._q_used = 0
+        if self._bp_paused:
+            self._bp_resume(eng)
+
+    def bp_admit(self, eng, records):
+        """Admission control for shed policies; pass-through otherwise.
+
+        Returns the (possibly reduced) batch to process.  The decision
+        is pure integer arithmetic over the size prefix (no RNG, even
+        for ``sample``), so shed counts are bit-identical across
+        processes and schedulers.
+        """
+        if self.queue_bytes_max <= 0 or self.shed_policy == "pause":
+            return records
+        if isinstance(records, BatchView):
+            sizes = records.sizes()
+        else:
+            sizes = [r.size for r in records]
+        total = sum(sizes)
+        space = max(0, self.queue_bytes_max - self._q_used)
+        if total <= space:
+            self._q_used += total
+            if self._q_used > self._q_peak:
+                self._q_peak = self._q_used
+            return records
+        how, sel, kept_bytes = shed_keep(sizes, space, self.shed_policy)
+        n = len(sizes)
+        if how == "slice":
+            lo, hi = sel
+            if isinstance(records, BatchView):
+                kept = records.subview(lo, hi)
+            else:
+                kept = records[lo:hi]
+            k = hi - lo
+        else:   # explicit indices (sample)
+            if isinstance(records, BatchView):
+                kept = [records.record_at(i) for i in sel]
+            else:
+                kept = [records[i] for i in sel]
+            k = len(sel)
+        self.n_shed += n - k
+        self.bytes_shed += total - kept_bytes
+        self._q_used += kept_bytes
+        if self._q_used > self._q_peak:
+            self._q_peak = self._q_used
+        eng.monitor.event(eng.now, "records_shed", sub=self.name,
+                          n=n - k, bytes=total - kept_bytes,
+                          policy=self.shed_policy)
+        return kept
+
     # -- legacy polling -------------------------------------------------
 
     def _poll(self, eng, topics) -> None:
+        if self._bp_full():
+            # paused replaces the scheduled poll event; bp_drain resumes
+            self._bp_pause(eng, tuple(topics))
+            return
         busy = self._busy_horizon(eng)
         if busy > eng.now:
             eng.schedule(busy - eng.now, lambda: self._poll(eng, topics))
             return
         for t in topics:
             eng.cluster.fetch(self, t)
+        if self._bp_starved:
+            self._bp_starved = False
+            self._bp_pause(eng, tuple(topics))
+            return
         eng.schedule(self.poll_interval, lambda: self._poll(eng, topics))
 
     # -- event-driven wakeups ------------------------------------------
@@ -101,12 +242,24 @@ class DeliveryLoop:
     # never duplicated and never dropped.
 
     def _fetch_once(self, eng, topic) -> None:
+        if self._bp_full():
+            # paused replaces both the fetch event and the waiter slot
+            # (no waiter is parked at this point per the invariant above)
+            self._bp_pause(eng, topic)
+            return
         busy = self._busy_horizon(eng)
         if busy > eng.now:
             eng.schedule(busy - eng.now,
                          lambda: self._fetch_once(eng, topic))
             return
         status = eng.cluster.fetch(self, topic)
+        if self._bp_starved:
+            # a partition has rows the ingest budget can't admit yet:
+            # park paused (replacing the fetch event) until bp_drain
+            # frees space, instead of spinning zero-row fetches
+            self._bp_starved = False
+            self._bp_pause(eng, topic)
+            return
         if status == FETCH_EMPTY or status == FETCH_DELIVERED:
             # drained to the high watermark: park until it advances
             eng.cluster.wait_for_data(self, topic)

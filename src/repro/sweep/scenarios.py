@@ -53,6 +53,19 @@ fault         none | partition | broker_down | gray_loss | spe_down,
               shaped by fault_at / fault_duration / fault_loss_pct
               (spe_down kills the stream processor's host — the
               recovery axis; requires a windowed SPE)
+consumer_cost extra per-record processing cost (s) on every consumer —
+              the overload knob for backpressure/shedding scenarios
+queue_bytes   > 0 bounds every subscriber's ingest queue at that many
+              bytes (consumers and the windowed SPE); 0 = unbounded
+shed_policy   what a full bounded queue does: "pause" (default —
+              backpressure: fetches stop until the queue drains) |
+              "drop_oldest" | "drop_newest" | "sample" (deterministic
+              byte-proportional thinning; no RNG)
+chaos         intensity c > 0 expands a seeded chaos plan over the
+              middle 80% of the run: c flapping links, c gray-loss
+              ramps, c slow hosts and c crash/heal cycles, drawn from
+              client_rng("chaos") (brokers are protected so the small
+              CI grids keep a live cluster)
 seed / horizon              consumed by the sweep runner, not here
 """
 from __future__ import annotations
@@ -104,12 +117,19 @@ def build_scenario(p: dict) -> PipelineSpec:
     if "n_consumers" in p:
         consumers = consumers[:int(p["n_consumers"])]
     n_groups = int(p.get("consumer_groups", 0))
+    queue_bytes = int(p.get("queue_bytes", 0))
+    shed_policy = p.get("shed_policy", "pause")
     for i, h in enumerate(consumers):
         subs = {topics[i % n_topics], topics[(i + 1) % n_topics]}
         cfg = dict(topics=sorted(subs),
                    pollInterval=float(p.get("poll_interval", 0.1)))
         if n_groups > 0:
             cfg["group"] = f"g{i % n_groups}"
+        if p.get("consumer_cost"):
+            cfg["perRecordCost"] = float(p["consumer_cost"])
+        if queue_bytes > 0:
+            cfg["queueBytes"] = queue_bytes
+            cfg["shedPolicy"] = shed_policy
         spec.add_consumer(h, "STANDARD", **cfg)
     windowed = p.get("windowed")
     if windowed is None:                 # explicit 0 wins over window_s
@@ -128,8 +148,16 @@ def build_scenario(p: dict) -> PipelineSpec:
             checkpointInterval=float(p.get("checkpoint_interval", 0.0)),
             semantics=p.get("spe_semantics", "at_least_once"),
             keyField="src", agg=p.get("spe_agg", "count"),
-            pollInterval=float(p.get("poll_interval", 0.1)))
+            pollInterval=float(p.get("poll_interval", 0.1)),
+            **({"queueBytes": queue_bytes, "shedPolicy": shed_policy}
+               if queue_bytes > 0 else {}))
     _install_fault(spec, p, brokers)
+    chaos = int(p.get("chaos", 0))
+    if chaos > 0:
+        horizon = float(p.get("horizon", 30.0))
+        spec.set_chaos(start=0.1 * horizon, duration=0.8 * horizon,
+                       flap_links=chaos, gray=chaos, slow=chaos,
+                       crashes=chaos, protect=tuple(brokers))
     return spec
 
 

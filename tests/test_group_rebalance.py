@@ -12,7 +12,7 @@ TOTAL = 150
 FAIL_AT, FAIL_LEN, HORIZON = 10.0, 12.0, 60.0
 
 
-def group_spec(delivery="wakeup"):
+def group_spec(delivery="wakeup", fault=True):
     spec = PipelineSpec(delivery=delivery)
     spec.add_switch("s1")
     spec.add_host("b1").add_link("b1", "s1", lat=1.0, bw=100.0)
@@ -25,7 +25,8 @@ def group_spec(delivery="wakeup"):
         spec.add_host(h).add_link(h, "s1", lat=1.0, bw=100.0)
         spec.add_consumer(h, "STANDARD", topics=["t"], group="g",
                           pollInterval=0.2)
-    spec.add_fault(FAIL_AT, "host_down", "c1", duration=FAIL_LEN)
+    if fault:
+        spec.add_fault(FAIL_AT, "host_down", "c1", duration=FAIL_LEN)
     return spec
 
 
@@ -90,3 +91,58 @@ def test_survivor_keeps_consuming_during_outage(run):
               for c, t in m.deliveries.items()
               if c == c0 and FAIL_AT + 2.0 <= t <= FAIL_AT + FAIL_LEN]
     assert window, "survivor must drain reassigned partitions mid-outage"
+
+
+# ---------------------------------------------------------------------------
+# Chaos-driven member crash (faults x consumer groups)
+# ---------------------------------------------------------------------------
+
+
+def chaos_group_spec(delivery):
+    # same pipeline, but the member crash comes from a seeded chaos plan
+    # instead of a hand-placed fault; protecting every other component
+    # host forces the crash/heal cycle onto member c1 mid-consumption
+    spec = group_spec(delivery, fault=False)
+    spec.set_chaos(start=FAIL_AT, duration=30.0, crashes=1,
+                   crash_downtime_s=FAIL_LEN, protect=("b1", "p", "c0"))
+    return spec
+
+
+@pytest.fixture(scope="module", params=["wakeup", "poll"])
+def chaos_run(request):
+    eng = Engine(chaos_group_spec(request.param), seed=9)
+    mon = eng.run(until=HORIZON)
+    return eng, mon
+
+
+def test_chaos_crash_rebalances_and_resumes_at_commit_point(chaos_run):
+    eng, mon = chaos_run
+    m = eng.metrics()
+    assert m["chaos_faults"] == 1
+    downs = mon.events_of("host_down")
+    assert [e["host"] for e in downs] == ["c1"], \
+        "the crash must land on the only unprotected host"
+    # crash + heal each trigger a group rebalance, the group still
+    # drains the full stream exactly once, and no waiter hangs
+    assert m["group_rebalances"] >= 2
+    members = set(_member_names(eng))
+    for msg in mon.msgs.values():
+        n = sum(1 for c in msg.deliveries if c in members)
+        assert n <= 1, "a record reached the group twice after rebalance"
+    assert len(mon.msgs) == TOTAL
+    assert sum(len(msg.deliveries) for msg in mon.msgs.values()) == TOTAL
+    assert m["group_lag"] == {"g:t": 0}
+    assert m["lost_or_partial"] == 0
+
+
+def test_chaos_crash_schedule_identical_across_delivery_modes():
+    # one seed names the adversarial schedule; the consumer delivery
+    # mode must not perturb it (chaos draws from its own RNG stream)
+    times = {}
+    for delivery in ("wakeup", "poll"):
+        eng = Engine(chaos_group_spec(delivery), seed=9)
+        mon = eng.run(until=HORIZON)
+        times[delivery] = [(e["t"], e["host"])
+                           for e in mon.events_of("host_down")]
+    assert times["wakeup"] == times["poll"]
+    assert times["wakeup"], "the chaos crash must actually fire"

@@ -138,6 +138,18 @@ def test_event_time_fields_are_inert_without_spes(rows):
             assert got[k] == 0, (k, got[k])
 
 
+def test_chaos_backpressure_fields_are_inert_at_defaults(rows):
+    # PR 6 additions: with no chaos plan, unbounded queues and a healthy
+    # cluster, every degradation counter must read exactly zero — they
+    # are fingerprinted, so inert means inert
+    for got in rows.values():
+        for k in ("produce_retries", "produce_expired", "chaos_faults",
+                  "fault_events", "records_shed", "bytes_shed",
+                  "backpressure_pauses", "queue_peak_bytes"):
+            assert got[k] == 0, (k, got[k])
+        assert got["pause_seconds"] == 0.0
+
+
 def test_columnar_path_materializes_no_records(rows):
     # the default (BatchView) delivery never builds a Record at the
     # boundary — the allocation win the CI bench gates on
