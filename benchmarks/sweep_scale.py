@@ -36,7 +36,9 @@ Schema::
                     path_queries, reach_computes,
                     record_objects_materialized,
                     phases: {build_spec_s, engine_init_s, run_s,
-                             metrics_s}}},
+                             metrics_s},
+                    profile?: {counts, wall_s, path_query_count,
+                               path_query_share}}},
       "reach_cache_compare": {n_hosts, horizon_sim_s,
                               events_uncached, events_cached,
                               computes_uncached, computes_cached,
@@ -78,9 +80,12 @@ def scale_base(horizon: float) -> dict:
     }
 
 
-def _run_sized(n_hosts: int, horizon: float) -> dict:
+def _run_sized(n_hosts: int, horizon: float,
+               profile: bool = False) -> dict:
     """One instrumented scale point: per-phase wall-clock breakdown."""
     params = {**scale_base(horizon), "n_hosts": n_hosts}
+    if profile:
+        params.update(telemetry=1.0, profile=1)
     t0 = time.perf_counter()
     spec = build_scenario(params)
     t1 = time.perf_counter()
@@ -96,10 +101,21 @@ def _run_sized(n_hosts: int, horizon: float) -> dict:
         "run_s": t3 - t2,
         "metrics_s": t4 - t3,
     }
+    if profile:
+        # in-engine phase accounting (repro.core.telemetry.Profiler):
+        # which layer the run phase actually spends its wall clock in,
+        # and the netem path-query share the routing cache must hold down
+        wall, run_s = dict(m["profile_wall"]), t3 - t2
+        m["profile"] = {
+            "counts": dict(m["profile_counts"]),
+            "wall_s": wall,
+            "path_query_count": m["profile_counts"]["netem_path"],
+            "path_query_share": wall.get("netem_path", 0.0) / run_s,
+        }
     return m
 
 
-def run(*, smoke: bool = False, full: bool = False,
+def run(*, smoke: bool = False, full: bool = False, profile: bool = False,
         out: str = "BENCH_sweep_scale.json") -> dict:
     # `full` kept for compat; 400 nodes is part of the default record
     sizes = [60] if smoke else [100, 200, 400]
@@ -107,7 +123,7 @@ def run(*, smoke: bool = False, full: bool = False,
     results: dict = {"sizes": {}}
 
     for n in sizes:
-        m = _run_sized(n, horizon)
+        m = _run_sized(n, horizon, profile=profile)
         results["sizes"][n] = {
             "engine_events": m["engine_events"],
             "wall_s": m["wall_s"],
@@ -121,6 +137,13 @@ def run(*, smoke: bool = False, full: bool = False,
                 m["record_objects_materialized"],
             "phases": m["phases"],
         }
+        if profile:
+            results["sizes"][n]["profile"] = m["profile"]
+            emit(f"sweep_scale/{n}nodes_profile",
+                 m["profile"]["wall_s"].get("netem_path", 0.0) * 1e6,
+                 f"path_queries={m['profile']['path_query_count']};"
+                 f"path_share={m['profile']['path_query_share']:.3f};"
+                 f"ops={m['profile']['counts'].get('operator', 0)}")
         emit(f"sweep_scale/{n}nodes", m["wall_s"] * 1e6,
              f"events={m['engine_events']};"
              f"delivered={m['records_delivered']};"
@@ -170,7 +193,12 @@ if __name__ == "__main__":
                     help="tiny sizes for CI (60 nodes)")
     ap.add_argument("--full", action="store_true",
                     help="compat flag (400 nodes now runs by default)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the sized points with the engine profiler "
+                         "on (telemetry=1s): per-phase call counts + "
+                         "wall shares land under sizes[n].profile")
     ap.add_argument("--out", default="BENCH_sweep_scale.json")
     args = ap.parse_args()
-    res = run(smoke=args.smoke, full=args.full, out=args.out)
+    res = run(smoke=args.smoke, full=args.full, profile=args.profile,
+              out=args.out)
     print(json.dumps(res["reach_cache_compare"], indent=2))

@@ -34,11 +34,23 @@ delivery modes and shed policies, gating:
   modes for otherwise-identical params — the chaos schedule and
   producer-side protocol randomness must not see the consumer loop.
 
+``--telemetry`` runs the observability gates (the CI ``obs-smoke`` job):
+
+- telemetry artifacts (series digests, stage-span histograms, flight
+  and profiler call counts) bit-identical across warm-pool processes,
+  the heap/calendar scheduler axis and columnar on/off;
+- telemetry-on adds only its own sampler events and < 5% extra engine
+  events on the smoke scenario, perturbing no other metric;
+- telemetry off (param absent or 0) is byte-for-byte inert;
+- the exported Chrome trace is valid JSON under the schema subset
+  Perfetto loads (``repro.obs.trace.validate_chrome_trace``).
+
 Exits non-zero on any gate failure; CI runs it on every PR.
 """
 from __future__ import annotations
 
 import glob
+import json
 import os
 import shutil
 import sys
@@ -50,6 +62,7 @@ from repro.sweep import SweepSpec, run_sweep, warm_pool_pids  # noqa: E402
 
 CACHE = ".ci_sweep"
 CHAOS_CACHE = ".ci_sweep_chaos"
+TEL_CACHE = ".ci_sweep_tel"
 
 sweep = SweepSpec(
     name="ci_smoke",
@@ -113,6 +126,73 @@ def chaos_main() -> None:
           rows[("wakeup", "pause")]["backpressure_pauses"])
 
 
+tel_sweep = SweepSpec(
+    name="ci_tel_smoke",
+    axes={"scheduler": ["calendar", "heap"], "columnar": [0, 1]},
+    base={**chaos_sweep.base, "consumer_groups": 1,
+          "telemetry": 0.5, "profile": 1, "lineage_k": 2})
+
+
+def telemetry_main() -> None:
+    """The --telemetry gates (CI obs-smoke job): cross-axis bit-identity
+    of every telemetry artifact, < 5% event overhead, telemetry-off
+    inertness, and a schema-valid Chrome trace export."""
+    from repro.core.engine import Engine
+    from repro.obs.trace import validate_chrome_trace
+    from repro.sweep.scenarios import build_scenario
+
+    shutil.rmtree(TEL_CACHE, ignore_errors=True)
+    os.makedirs(TEL_CACHE)
+    a = run_sweep(tel_sweep, workers=2, cache_dir=TEL_CACHE,
+                  progress=print)
+    assert len(a) == 4 and a.n_cached == 0
+    rows = {(r["params"]["scheduler"], r["params"]["columnar"]):
+            r["metrics"] for r in a.rows}
+    ref = rows[("calendar", 1)]
+    for key, m in sorted(rows.items()):
+        for k in ("telemetry_digest", "stage_digest", "telemetry_samples",
+                  "telemetry_series", "stage_spans", "flight_events",
+                  "lineage_records", "profile_counts"):
+            assert m[k] == ref[k], \
+                f"{k} differs across scheduler/columnar axis {key}"
+
+    def _run(params):
+        eng = Engine(build_scenario(params), seed=int(params["seed"]))
+        return eng, eng.run_metrics(until=float(params["horizon"]))
+
+    base = dict(chaos_sweep.base)
+    _, m_off = _run(base)                          # telemetry param absent
+    _, m_zero = _run({**base, "telemetry": 0.0})   # explicit zero
+    assert {k: v for k, v in m_off.items() if k != "wall_s"} == \
+        {k: v for k, v in m_zero.items() if k != "wall_s"}, \
+        "telemetry=0 must be byte-for-byte inert"
+    eng_on, m_on = _run({**base, "telemetry": 0.5, "profile": 1,
+                         "lineage_k": 2})
+    extra = m_on["engine_events"] - m_off["engine_events"]
+    assert extra == m_on["telemetry_samples"], \
+        "telemetry added events beyond its own sampler ticks"
+    overhead = extra / m_off["engine_events"]
+    assert overhead < 0.05, \
+        f"telemetry event overhead {overhead:.1%} breaches the 5% gate"
+    for k, v in m_off.items():
+        if k in ("engine_events", "events_scheduled", "wall_s"):
+            continue
+        assert m_on[k] == v, \
+            f"telemetry-on perturbed non-telemetry metric {k}"
+    trace_path = os.path.join(TEL_CACHE, "trace.json")
+    obj = eng_on.export_trace(trace_path)
+    problems = validate_chrome_trace(obj)
+    assert not problems, f"exported trace invalid: {problems[:3]}"
+    with open(trace_path) as f:
+        reloaded = json.load(f)
+    assert validate_chrome_trace(reloaded) == []
+    print(a.table())
+    print(f"telemetry smoke ok | samples: {m_on['telemetry_samples']} "
+          f"| event overhead: {overhead:.2%} "
+          f"| flight events: {m_on['flight_events']} "
+          f"| trace events: {len(obj['traceEvents'])}")
+
+
 def main() -> None:
     shutil.rmtree(CACHE, ignore_errors=True)
     a = run_sweep(sweep, workers=2, cache_dir=CACHE, progress=print)
@@ -140,5 +220,7 @@ def main() -> None:
 if __name__ == "__main__":
     if "--chaos" in sys.argv[1:]:
         chaos_main()
+    elif "--telemetry" in sys.argv[1:]:
+        telemetry_main()
     else:
         main()

@@ -20,6 +20,9 @@ from repro.core.operators import (
 from repro.core.state import (
     FileStateBackend, MemoryStateBackend, StateBackend,
 )
+from repro.core.telemetry import (
+    LatencyHistogram, Profiler, Telemetry, TelemetryCfg,
+)
 
 __all__ = [
     "PipelineSpec", "Component", "TopicCfg", "FaultCfg", "HostSpec",
@@ -29,5 +32,6 @@ __all__ = [
     "Element", "Filter", "FlatMap", "KeyBy", "Map", "OperatorChain",
     "Sink", "SlidingWindow", "StatefulMap", "TumblingWindow",
     "WindowAggregate", "StateBackend", "MemoryStateBackend",
-    "FileStateBackend",
+    "FileStateBackend", "TelemetryCfg", "Telemetry", "LatencyHistogram",
+    "Profiler",
 ]

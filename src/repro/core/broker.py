@@ -82,6 +82,7 @@ semantics (``core/spe.py``).
 from __future__ import annotations
 
 import dataclasses
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -1012,6 +1013,14 @@ class Cluster:
         appended = log.append_batch(pend.records, epoch=bepoch)
         nbytes = pend.nbytes
         eng.monitor.broker_rx(broker, nbytes)
+        tel = eng.telemetry
+        if tel is not None:
+            now = eng.now
+            tel.span_many("append", topic,
+                          [now - r.produce_time for r in appended])
+            if tel._lineage:
+                tel.lineage_mark([r.msg_id for r in appended],
+                                 "append", now)
         # Kafka default acks=1: ack once the (believed) leader has the
         # batch.  Consumer visibility waits for the high watermark; an
         # isolated stale leader acks writes that never commit cluster-wide
@@ -1040,6 +1049,12 @@ class Cluster:
                 if rl.leo == first_off:       # in-order replication only
                     rl.append_batch(records)
                     eng.monitor.broker_rx(b, nbytes)
+                    tel = eng.telemetry
+                    if tel is not None:
+                        now = eng.now
+                        tel.span_many(
+                            "replicate", pm.topic,
+                            [now - r.produce_time for r in records])
                     self._maybe_commit(pm.topic, pm.partition)
 
             eng.schedule(delay, _deliver)
@@ -1090,6 +1105,15 @@ class Cluster:
         any partition byte-capped → ``delivered_more``; else any blocked
         → ``blocked`` (interval retries under faults); else park.
         """
+        prof = self.engine.profiler
+        if prof is None:
+            return self._fetch(consumer, topic)
+        t0 = time.perf_counter()
+        st = self._fetch(consumer, topic)
+        prof.add("fetch", time.perf_counter() - t0)
+        return st
+
+    def _fetch(self, consumer, topic: str) -> str:
         eng = self.engine
         rng = eng.client_rng(consumer.name)
         # fetch.min.bytes lingering: with fewer than fetch_min_bytes
@@ -1224,10 +1248,25 @@ class Cluster:
                          counter=self)
         batch = view if self.columnar else view.to_records()
         mids = view.msg_ids()
+        # stage spans: produce→fetch at request time, produce→deliver at
+        # landing time.  view.produce_time is a stable columnar slice, so
+        # both are one vectorized histogram insert (and identical whether
+        # the subscriber consumes the view or materialized records).
+        tel = eng.telemetry
+        pts = view.produce_time if tel is not None else None
+        if tel is not None:
+            tel.span_many("fetch", topic, eng.now - pts)
 
         def _deliver():
+            prof = eng.profiler
+            t0 = time.perf_counter() if prof is not None else 0.0
             eng.monitor.delivered_many(mids, consumer.name, eng.now)
+            if tel is not None:
+                tel.span_many("deliver", topic, eng.now - pts)
+                tel.lineage_mark(mids, "deliver", eng.now)
             consumer.on_records(eng, batch)
+            if prof is not None:
+                prof.add("deliver", time.perf_counter() - t0)
 
         # TCP-ordered responses: a small later response must not overtake
         # a big in-flight one, or the consumer would see offsets out of

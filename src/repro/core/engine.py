@@ -45,8 +45,6 @@ import time
 import zlib
 from typing import Callable, Optional
 
-import numpy as np
-
 from repro.core.broker import Cluster
 from repro.core.calqueue import make_queue
 from repro.core.monitor import Monitor
@@ -54,6 +52,7 @@ from repro.core.state import MemoryStateBackend
 from repro.core.spec import (
     BROKER, CONSUMER, PRODUCER, SPE, STORE, PipelineSpec,
 )
+from repro.core.telemetry import LatencyHistogram, Profiler, Telemetry
 from repro.core import faults as faults_mod
 
 
@@ -114,6 +113,15 @@ class Engine:
         # for parity checks and the allocation-counter baseline)
         self.columnar = bool(getattr(spec, "columnar", True))
         self.monitor = monitor or Monitor()
+        # observability (core/telemetry.py): None at the defaults — the
+        # telemetry-off contract is *zero* added events and RNG draws,
+        # so hot paths only ever pay an `is None` check
+        tcfg = getattr(spec, "telemetry", None)
+        self.telemetry = Telemetry(tcfg) if tcfg is not None else None
+        self.profiler = Profiler() if tcfg is not None and tcfg.profile \
+            else None
+        self.monitor.telemetry = self.telemetry
+        self.net.profiler = self.profiler
         # durable checkpoint store (the job-manager role): survives
         # emulated host failures; SPE runtimes snapshot into it and
         # restore from it on recovery (see core/spe.py + core/state.py)
@@ -221,12 +229,46 @@ class Engine:
     def run(self, until: float) -> Monitor:
         faults_mod.install(self, self.spec.faults)
         self.monitor.bind_clock(lambda: self.now)
+        if self.telemetry is not None:
+            self.telemetry.start(self)
         self.cluster.start()
         for rt in self.runtimes:
             rt.start(self)
         pop = self._q.pop
+        if self.profiler is not None:
+            self._run_profiled(until, pop)
+        else:
+            while not self._stopped:
+                e = pop()
+                if e is None:
+                    break
+                t, _, h = e
+                if h.cancelled:
+                    self.n_cancelled += 1
+                    continue
+                if t > until:
+                    break
+                self.now = t
+                self.n_events += 1
+                h.fn()
+        self.now = until
+        return self.monitor
+
+    def _run_profiled(self, until: float, pop) -> None:
+        """The event loop with wall-clock phase accounting.
+
+        A separate loop so the default path stays branch-free; pop and
+        dispatch wall times accumulate into locals and flush once.  Event
+        *order* and counts are identical to the plain loop — the profiler
+        only observes.
+        """
+        prof = self.profiler
+        perf = time.perf_counter
+        pop_wall = fn_wall = 0.0
         while not self._stopped:
+            t0 = perf()
             e = pop()
+            pop_wall += perf() - t0
             if e is None:
                 break
             t, _, h = e
@@ -237,9 +279,11 @@ class Engine:
                 break
             self.now = t
             self.n_events += 1
+            t1 = perf()
             h.fn()
-        self.now = until
-        return self.monitor
+            fn_wall += perf() - t1
+        prof.add_wall("scheduler_pop", pop_wall)
+        prof.add_wall("event_fn", fn_wall)
 
     # ------------------------------------------------------------------
     # Structured metrics (the sweep runner's result contract)
@@ -250,6 +294,13 @@ class Engine:
         t0 = time.perf_counter()
         self.run(until=until)
         return self.metrics(wall_s=time.perf_counter() - t0)
+
+    def export_trace(self, path: str) -> dict:
+        """Write this run's flight-recorder + telemetry state as Chrome
+        trace-event JSON (Perfetto-loadable); requires telemetry enabled
+        on the spec.  Returns the trace object."""
+        from repro.obs.trace import write_trace
+        return write_trace(self, path)
 
     def metrics(self, *, wall_s: Optional[float] = None) -> dict:
         """One flat, JSON-serializable summary of a finished run.
@@ -268,7 +319,6 @@ class Engine:
         n_subs = {t: len({cluster.group_of(c) for c in cs})
                   for t, cs in cluster.subs.items()}
         delivered = expired = truncated = lost = 0
-        lats: list[float] = []
         # per-(topic, partition) tallies, sorted keys for the
         # cross-process fingerprint contract
         part_produced: dict[str, int] = {}
@@ -293,7 +343,6 @@ class Engine:
                 part_delivered[pk] += len(m.deliveries)
                 part_bytes[pk] += m.size * len(m.deliveries)
             for t in m.deliveries.values():
-                lats.append(t - m.produce_time)
                 if pk in part_lat_sum:
                     part_lat_sum[pk] += t - m.produce_time
         # per-partition mean produce→deliver latency (the partition-level
@@ -314,7 +363,13 @@ class Engine:
                 lag += max(0, hw - cluster.committed_offset(topic, p,
                                                             gname))
             group_lag[f"{gname}:{topic}"] = lag
+        # delivery latency comes from the monitor's bounded histogram
+        # (fed at first-delivery time): exact count/mean, bin-resolution
+        # p50/p99 — no unbounded per-delivery list is ever built here
+        lat_hist = mon.delivery_hist
         e2e = mon.e2e_latency()
+        e2e_hist = LatencyHistogram()
+        e2e_hist.add_many(e2e)
         util = self.resource_report()
         # event-time / checkpoint accounting (operator-graph SPEs):
         # window_emit events carry the emission identity (spe, key,
@@ -343,7 +398,7 @@ class Engine:
         fault_events = sum(
             len(mon.events_of(k))
             for k in ("link_down", "host_down", "gray_loss", "slow_host"))
-        return {
+        out = {
             "sim_s": self.now,
             "wall_s": wall_s,
             "engine_events": self.n_events,
@@ -357,13 +412,15 @@ class Engine:
             "elections": len(mon.events_of("leader_elected")),
             "isr_changes": len(mon.events_of("isr_shrink"))
             + len(mon.events_of("isr_expand")),
-            "latency_count": len(lats),
-            "latency_mean": float(np.mean(lats)) if lats else 0.0,
-            "latency_p50": float(np.percentile(lats, 50)) if lats else 0.0,
-            "latency_p99": float(np.percentile(lats, 99)) if lats else 0.0,
+            "latency_count": lat_hist.n,
+            "latency_mean": lat_hist.mean,
+            "latency_p50": lat_hist.quantile(0.50),
+            "latency_p99": lat_hist.quantile(0.99),
             "e2e_count": len(e2e),
             "e2e_sum": float(sum(e2e)),
             "e2e_mean": float(sum(e2e) / len(e2e)) if e2e else 0.0,
+            "e2e_p50": e2e_hist.quantile(0.50),
+            "e2e_p99": e2e_hist.quantile(0.99),
             "n_partitions": sum(m.n_partitions
                                 for m in cluster.topics.values()),
             "n_groups": len({gs.group for gs in cluster.groups.values()
@@ -407,6 +464,24 @@ class Engine:
             "max_util_pct": max(
                 (h["util_pct"] for h in util.values()), default=0.0),
         }
+        # observability surfaces join the dict only when enabled, so the
+        # telemetry-off metrics stay key-for-key identical to the pins
+        tel = self.telemetry
+        if tel is not None:
+            out.update(tel.metrics_fields())
+        prof = self.profiler
+        if prof is not None:
+            # call counts are deterministic and join the fingerprint;
+            # wall seconds are not (sweep.results.TIMING_KEYS excludes
+            # profile_wall from cache/repeat identity checks)
+            out["profile_counts"] = {
+                "scheduler_pops": self.n_events,
+                "netem_path": self.net.n_path_queries,
+                **{k: prof.counts[k] for k in sorted(prof.counts)},
+            }
+            out["profile_wall"] = {
+                k: prof.wall[k] for k in sorted(prof.wall)}
+        return out
 
     # ------------------------------------------------------------------
     # Compute model hooks

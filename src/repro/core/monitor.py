@@ -11,6 +11,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+from repro.core.telemetry import LatencyHistogram
+
 
 @dataclass
 class MsgStat:
@@ -37,6 +39,13 @@ class Monitor:
         self.rx: dict[str, collections.Counter] = collections.defaultdict(
             collections.Counter)
         self._now = lambda: 0.0     # set by the engine
+        # bounded store behind Engine.metrics()'s latency_* fields:
+        # first-time deliveries land here instead of an unbounded raw
+        # list (fixed bins, vectorized per fetch response)
+        self.delivery_hist = LatencyHistogram()
+        # observability hooks; the engine attaches its Telemetry when
+        # the spec enables it (None = off, zero overhead)
+        self.telemetry = None
 
     def bind_clock(self, now_fn) -> None:
         self._now = now_fn
@@ -47,6 +56,12 @@ class Monitor:
         self.msgs[rec.msg_id] = MsgStat(
             rec.msg_id, rec.topic, rec.producer, rec.size, rec.produce_time,
             getattr(rec, "partition", 0))
+        tel = self.telemetry
+        if tel is not None:
+            tel.lineage_produce(rec.msg_id, rec.topic, rec.produce_time)
+            tel.flight(rec.produce_time, "produce",
+                       topic=rec.topic, producer=rec.producer,
+                       msg_id=rec.msg_id, size=rec.size)
 
     def committed(self, rec, t: float) -> None:
         self.msgs[rec.msg_id].ack_time = t
@@ -64,10 +79,27 @@ class Monitor:
 
     def delivered_many(self, msg_ids, consumer: str, t: float) -> None:
         """Batched delivery tally (the columnar fetch path: one call per
-        response, no per-row Record objects)."""
+        response, no per-row Record objects).
+
+        First-time deliveries feed the bounded latency histogram (and,
+        when telemetry is on, per-partition rate counters + a flight
+        marker); re-deliveries keep the original timestamp, matching the
+        old ``setdefault`` semantics.
+        """
         msgs = self.msgs
+        tel = self.telemetry
+        lats = []
         for mid in msg_ids:
-            msgs[mid].deliveries.setdefault(consumer, t)
+            m = msgs[mid]
+            if consumer not in m.deliveries:
+                m.deliveries[consumer] = t
+                lats.append(t - m.produce_time)
+                if tel is not None:
+                    tel.count_delivery(m.topic, m.partition, m.size)
+        if lats:
+            self.delivery_hist.add_many(lats)
+            if tel is not None:
+                tel.flight(t, "deliver", consumer=consumer, n=len(lats))
 
     # --- network counters --------------------------------------------------
 
@@ -81,6 +113,9 @@ class Monitor:
 
     def event(self, t: float, kind: str, **kw) -> None:
         self.events.append({"t": t, "kind": kind, **kw})
+        tel = self.telemetry
+        if tel is not None:
+            tel.flight(t, kind, **kw)
 
     def events_of(self, kind: str) -> list[dict]:
         return [e for e in self.events if e["kind"] == kind]

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -85,6 +86,9 @@ class Network:
         self.n_reach_queries = 0    # reachable() calls
         self.n_path_queries = 0     # path() calls
         self.n_graph_builds = 0     # expensive recomputes (SSSP/components)
+        # opt-in wall-clock accounting (core/telemetry.Profiler); the
+        # engine attaches it when TelemetryCfg(profile=True)
+        self.profiler = None
 
     def _invalidate(self) -> None:
         self.epoch += 1
@@ -159,6 +163,15 @@ class Network:
 
     def path(self, src: str, dst: str) -> Optional[list[str]]:
         """Lowest-latency live path, or None if partitioned."""
+        prof = self.profiler
+        if prof is not None:
+            t0 = time.perf_counter()
+            out = self._path(src, dst)
+            prof.add_wall("netem_path", time.perf_counter() - t0)
+            return out
+        return self._path(src, dst)
+
+    def _path(self, src: str, dst: str) -> Optional[list[str]]:
         self.n_path_queries += 1
         if not self.reach_cache:        # baseline: recompute every query
             self._live = None

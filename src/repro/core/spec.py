@@ -8,7 +8,8 @@ built programmatically (the tests' and examples' preferred path).
 
 Supported attributes mirror the paper's Table I:
 
-graph:  topicCfg, faultCfg, chaosCfg (seed-expanded fault plans)
+graph:  topicCfg, faultCfg, chaosCfg (seed-expanded fault plans),
+        telemetryCfg (observability: sampling interval, lineage, profiler)
 node:   prodType/prodCfg, consType/consCfg, streamProcType/streamProcCfg,
         storeType/storeCfg, brokerCfg, cpuPercentage
 link:   lat (ms), bw (Mbps), loss (%), st, dt (ports)
@@ -40,6 +41,7 @@ import networkx as nx
 import yaml
 
 from repro.core.netem import LinkCfg, Network
+from repro.core.telemetry import TelemetryCfg
 
 # component roles
 PRODUCER = "producer"
@@ -168,6 +170,9 @@ class PipelineSpec:
         self.faults: list[FaultCfg] = []
         # seed-expanded adversarial plan (None = no chaos; see ChaosCfg)
         self.chaos: Optional[ChaosCfg] = None
+        # observability knobs (None = telemetry off, zero added events;
+        # see core/telemetry.py and the ROADMAP telemetry contract)
+        self.telemetry: Optional[TelemetryCfg] = None
         # core-tier site names carried from a geo_wan topology's
         # core/access split (empty otherwise) — chaos correlated
         # failures prefer access-tier hosts
@@ -281,6 +286,11 @@ class PipelineSpec:
         if "protect" in kw:
             kw["protect"] = tuple(kw["protect"])
         self.chaos = ChaosCfg(**kw)
+        return self
+
+    def set_telemetry(self, **kw) -> "PipelineSpec":
+        """Enable observability (see :class:`~repro.core.telemetry.TelemetryCfg`)."""
+        self.telemetry = TelemetryCfg(**kw)
         return self
 
     # ------------------------------------------------------------------
@@ -418,6 +428,16 @@ class PipelineSpec:
                 problems.append(
                     "chaos: slow/crash categories need at least one "
                     "unprotected component host")
+        tel = self.telemetry
+        if tel is not None:
+            if tel.interval_s <= 0:
+                problems.append("telemetry: interval_s must be > 0")
+            if tel.ring_slots < 1:
+                problems.append("telemetry: ring_slots must be >= 1")
+            if tel.flight_slots < 1:
+                problems.append("telemetry: flight_slots must be >= 1")
+            if tel.lineage_k < 0:
+                problems.append("telemetry: lineage_k must be >= 0")
         for name, h in self.hosts.items():
             if brokers and h.components and not any(
                     self.network.reachable(name, b) for b in brokers):
@@ -476,6 +496,9 @@ def from_graphml(path: str, *, mode: Optional[str] = None,
     if "chaosCfg" in g.graph:
         # graph-level chaos plan: YAML keys mirror ChaosCfg fields
         spec.set_chaos(**_load_cfg(g.graph["chaosCfg"], base))
+    if "telemetryCfg" in g.graph:
+        # graph-level observability: YAML keys mirror TelemetryCfg fields
+        spec.set_telemetry(**_load_cfg(g.graph["telemetryCfg"], base))
 
     for node, attrs in g.nodes(data=True):
         has_comp = any(k in attrs for k in (

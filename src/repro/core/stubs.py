@@ -260,6 +260,21 @@ class ConsumerBase(DeliveryLoop):
             for p in payloads_of(records):
                 if isinstance(p, dict) and "unit" in p:
                     eng.monitor.event(eng.now, "unit_out", unit=p["unit"])
+            tel = eng.telemetry
+            if tel is not None and isinstance(records, BatchView):
+                # sink span: produce → consumer processing complete
+                # (one vectorized insert off the columnar slice)
+                tel.span_many("sink", records.topic,
+                              eng.now - records.produce_time)
+                if tel._lineage:
+                    tel.lineage_mark(records.msg_ids(), "sink", eng.now)
+            elif tel is not None and records:
+                tel.span_many(
+                    "sink", records[0].topic,
+                    [eng.now - r.produce_time for r in records])
+                if tel._lineage:
+                    tel.lineage_mark([r.msg_id for r in records],
+                                     "sink", eng.now)
             self.handle(eng, records)
             if self.queue_bytes_max > 0:
                 self.bp_drain(eng, nbytes, ep)

@@ -144,6 +144,10 @@ class DeliveryLoop:
         if key not in self._bp_paused:
             self._bp_paused[key] = eng.now
             self.n_pauses += 1
+            tel = eng.telemetry
+            if tel is not None:
+                tel.flight(eng.now, "bp_pause", sub=self.name,
+                           queued_bytes=self._q_used)
 
     def bp_drain(self, eng, nbytes: int, epoch=None) -> None:
         """Release queue bytes after processing; resume paused loops."""
@@ -155,6 +159,10 @@ class DeliveryLoop:
 
     def _bp_resume(self, eng) -> None:
         paused, self._bp_paused = self._bp_paused, {}
+        tel = eng.telemetry
+        if tel is not None and paused:
+            tel.flight(eng.now, "bp_resume", sub=self.name,
+                       queued_bytes=self._q_used)
         for key, since in paused.items():
             self.pause_s += eng.now - since
             if isinstance(key, tuple):      # poll mode: whole topic list

@@ -22,7 +22,9 @@ from typing import Optional, Sequence
 import numpy as np
 
 # nondeterministic metrics: excluded from fingerprints and CI gates
-TIMING_KEYS = ("wall_s",)
+# (profile_wall is the profiler's wall-clock phase accounting — its
+# sibling profile_counts *is* deterministic and stays fingerprinted)
+TIMING_KEYS = ("wall_s", "profile_wall")
 
 DEFAULT_METRICS = ("records_produced", "records_delivered",
                    "lost_or_partial", "latency_p50", "latency_p99",

@@ -66,6 +66,14 @@ chaos         intensity c > 0 expands a seeded chaos plan over the
               ramps, c slow hosts and c crash/heal cycles, drawn from
               client_rng("chaos") (brokers are protected so the small
               CI grids keep a live cluster)
+telemetry     sampling interval (s) > 0 enables the observability layer
+              (core/telemetry.py): time-series rings, per-stage latency
+              histograms, flight recorder — all deterministic, all in
+              the fingerprint.  0 (default) = off, zero added events.
+profile       truthy (with telemetry on) enables the engine profiler:
+              profile_counts is fingerprinted, profile_wall is a
+              TIMING_KEY
+lineage_k     full per-stage traces for the first K records per topic
 seed / horizon              consumed by the sweep runner, not here
 """
 from __future__ import annotations
@@ -158,6 +166,11 @@ def build_scenario(p: dict) -> PipelineSpec:
         spec.set_chaos(start=0.1 * horizon, duration=0.8 * horizon,
                        flap_links=chaos, gray=chaos, slow=chaos,
                        crashes=chaos, protect=tuple(brokers))
+    tel = float(p.get("telemetry", 0.0))
+    if tel > 0:
+        spec.set_telemetry(interval_s=tel,
+                           profile=bool(p.get("profile", 0)),
+                           lineage_k=int(p.get("lineage_k", 0)))
     return spec
 
 

@@ -27,6 +27,18 @@ and ``scheduler="heap"`` (the pre-calendar global heap) must reproduce
 the identical metrics, sink digests and sweep fingerprints in both
 delivery modes, with only ``record_objects_materialized`` allowed to
 differ between the columnar settings.
+
+PR 7 (telemetry): ``latency_mean``/``latency_p50``/``latency_p99`` were
+re-pinned (full precision, captured at the PR 6 head + histogram change
+only).  The unbounded per-delivery latency list was replaced by the
+monitor's bounded log-spaced histogram: the mean now accumulates in
+delivery order (last-ulp difference vs the old produce-order
+``np.mean``) and p50/p99 are geometric bin midpoints instead of
+``np.percentile`` interpolation.  Every other pinned field — event
+counts, delivery tallies, path queries, ``latency_count`` — is
+unchanged, which is the telemetry-off inertness proof; the explicit
+key-absence check below pins that no telemetry/profiler field appears
+at the defaults.
 """
 import hashlib
 
@@ -54,9 +66,9 @@ PINNED = {
         "records_delivered": 392, "records_expired": 0,
         "records_truncated": 0, "lost_or_partial": 2, "elections": 0,
         "isr_changes": 0, "latency_count": 392,
-        "latency_mean": 0.056302812448791574,
-        "latency_p50": 0.056507552104038294,
-        "latency_p99": 0.10532483557949673,
+        "latency_mean": 0.05630281244879161,
+        "latency_p50": 0.06042963902381328,
+        "latency_p99": 0.10746078283213174,
         "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
         "reach_queries": 160, "path_queries": 1472, "reach_computes": 9,
         "max_util_pct": 0.0051024000000000095,
@@ -67,9 +79,9 @@ PINNED = {
         "records_delivered": 400, "records_expired": 0,
         "records_truncated": 0, "lost_or_partial": 0, "elections": 0,
         "isr_changes": 0, "latency_count": 400,
-        "latency_mean": 0.007226228840132699,
-        "latency_p50": 0.006008704000000975,
-        "latency_p99": 0.05769052315344608,
+        "latency_mean": 0.0072262288401327,
+        "latency_p50": 0.006042963902381328,
+        "latency_p99": 0.06042963902381328,
         "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
         "reach_queries": 160, "path_queries": 880, "reach_computes": 9,
         "max_util_pct": 0.0051024000000000095,
@@ -80,9 +92,9 @@ PINNED = {
         "records_delivered": 704, "records_expired": 0,
         "records_truncated": 0, "lost_or_partial": 2, "elections": 0,
         "isr_changes": 0, "latency_count": 704,
-        "latency_mean": 0.056440487212311895,
-        "latency_p50": 0.05685140816304002,
-        "latency_p99": 0.1051640393845605,
+        "latency_mean": 0.05644048721231185,
+        "latency_p50": 0.06042963902381328,
+        "latency_p99": 0.10746078283213174,
         "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
         "reach_queries": 172, "path_queries": 2584, "reach_computes": 13,
         "max_util_pct": 0.0051024000000000095,
@@ -93,9 +105,9 @@ PINNED = {
         "records_delivered": 720, "records_expired": 0,
         "records_truncated": 0, "lost_or_partial": 0, "elections": 0,
         "isr_changes": 0, "latency_count": 720,
-        "latency_mean": 0.007149962732744778,
-        "latency_p50": 0.006008704000000975,
-        "latency_p99": 0.05761361523774846,
+        "latency_mean": 0.007149962732744779,
+        "latency_p50": 0.006042963902381328,
+        "latency_p99": 0.06042963902381328,
         "e2e_count": 0, "e2e_sum": 0.0, "e2e_mean": 0.0,
         "reach_queries": 172, "path_queries": 1520, "reach_computes": 13,
         "max_util_pct": 0.0051024000000000095,
@@ -136,6 +148,20 @@ def test_event_time_fields_are_inert_without_spes(rows):
                   "checkpoint_count", "recovered_duplicates",
                   "spe_recoveries"):
             assert got[k] == 0, (k, got[k])
+
+
+def test_telemetry_fields_are_absent_at_defaults(rows):
+    # PR 7: telemetry off is the default, and off means *absent* — the
+    # metrics dict gains no keys, so pre-telemetry fingerprints (and the
+    # sweep cache) are untouched.  The spec-level default is also pinned:
+    # build_scenario without a "telemetry" param must leave spec.telemetry
+    # None (engine: zero added events, zero RNG draws).
+    for got in rows.values():
+        for k in ("telemetry_samples", "telemetry_series",
+                  "telemetry_digest", "stage_spans", "stage_digest",
+                  "lineage_records", "flight_events",
+                  "profile_counts", "profile_wall"):
+            assert k not in got, k
 
 
 def test_chaos_backpressure_fields_are_inert_at_defaults(rows):
