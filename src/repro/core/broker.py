@@ -84,6 +84,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import zlib
+from bisect import bisect_left, bisect_right
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -147,7 +148,8 @@ class RecordBatch:
     """
 
     __slots__ = ("n", "msg_id", "size", "produce_time", "epoch",
-                 "event_time", "cum_size", "payloads", "producers", "keys")
+                 "event_time", "cum_size", "cum_list", "payloads",
+                 "producers", "keys")
 
     _MIN_CAP = 64
 
@@ -159,6 +161,11 @@ class RecordBatch:
         self.epoch = np.empty(self._MIN_CAP, np.int64)
         self.event_time = np.empty(self._MIN_CAP, np.float64)
         self.cum_size = np.empty(self._MIN_CAP, np.int64)
+        # python-int mirror of cum_size[:n]: the byte-window take on the
+        # fetch hot path bisects this (C-speed int compares, no numpy
+        # scalar round trips); the numpy column stays authoritative for
+        # vectorized slices
+        self.cum_list: list[int] = []
         self.payloads: list[Any] = []
         self.producers: list[str] = []
         self.keys: list[Any] = []
@@ -190,7 +197,9 @@ class RecordBatch:
         self.epoch[i] = epoch
         self.event_time[i] = (produce_time if event_time is None
                               else event_time)
-        self.cum_size[i] = size + (self.cum_size[i - 1] if i else 0)
+        total = size + (self.cum_list[i - 1] if i else 0)
+        self.cum_size[i] = total
+        self.cum_list.append(total)
         self.payloads.append(payload)
         self.producers.append(producer)
         self.keys.append(key)
@@ -219,9 +228,10 @@ class RecordBatch:
         self.epoch[i:i + k] = epochs
         self.event_time[i:i + k] = (produce_times if event_times is None
                                     else event_times)
-        base = int(self.cum_size[i - 1]) if i else 0
-        self.cum_size[i:i + k] = base + np.cumsum(
-            np.asarray(sizes, np.int64))
+        base = self.cum_list[i - 1] if i else 0
+        cs = base + np.cumsum(np.asarray(sizes, np.int64))
+        self.cum_size[i:i + k] = cs
+        self.cum_list.extend(cs.tolist())
         self.payloads.extend(payloads)
         self.producers.extend(producers)
         self.keys.extend(keys if keys is not None else [None] * k)
@@ -234,11 +244,11 @@ class RecordBatch:
         """Total bytes of rows [lo, hi)."""
         if hi <= lo:
             return 0
-        base = int(self.cum_size[lo - 1]) if lo else 0
-        return int(self.cum_size[hi - 1]) - base
+        base = self.cum_list[lo - 1] if lo else 0
+        return self.cum_list[hi - 1] - base
 
     def total_bytes(self) -> int:
-        return int(self.cum_size[self.n - 1]) if self.n else 0
+        return self.cum_list[self.n - 1] if self.n else 0
 
     def take_by_bytes(self, lo: int, hi: int, max_bytes: int
                       ) -> tuple[int, int]:
@@ -249,11 +259,11 @@ class RecordBatch:
         """
         if hi <= lo:
             return 0, 0
-        base = int(self.cum_size[lo - 1]) if lo else 0
-        k = int(np.searchsorted(self.cum_size[lo:hi], base + max_bytes,
-                                side="left"))
+        cum = self.cum_list
+        base = cum[lo - 1] if lo else 0
+        k = bisect_left(cum, base + max_bytes, lo, hi) - lo
         n = min(hi - lo, k + 1)
-        return n, int(self.cum_size[lo + n - 1]) - base
+        return n, cum[lo + n - 1] - base
 
     def take_within_bytes(self, lo: int, hi: int, max_bytes: int
                           ) -> tuple[int, int]:
@@ -266,19 +276,20 @@ class RecordBatch:
         """
         if hi <= lo:
             return 0, 0
-        base = int(self.cum_size[lo - 1]) if lo else 0
-        k = int(np.searchsorted(self.cum_size[lo:hi], base + max_bytes,
-                                side="right"))
+        cum = self.cum_list
+        base = cum[lo - 1] if lo else 0
+        k = bisect_right(cum, base + max_bytes, lo, hi) - lo
         n = min(hi - lo, k)
         if n == 0:
             return 0, 0
-        return n, int(self.cum_size[lo + n - 1]) - base
+        return n, cum[lo + n - 1] - base
 
     def copy_from(self, other: "RecordBatch") -> None:
         """Become an exact copy of ``other`` (payload objects shared)."""
         self.n = other.n
         for name in self._COLS:
             setattr(self, name, getattr(other, name)[:other.n].copy())
+        self.cum_list = other.cum_list[:other.n]
         self.payloads = list(other.payloads)
         self.producers = list(other.producers)
         self.keys = list(other.keys)
@@ -343,7 +354,7 @@ class BatchView:
         self._pt = batch.produce_time
         self._et = batch.event_time
         self._epoch = batch.epoch
-        self._cum = batch.cum_size
+        self._cum = batch.cum_list
         self._plist = batch.payloads
         self._klist = batch.keys
         self._prods = batch.producers
@@ -399,8 +410,8 @@ class BatchView:
         lo, hi = self.lo, self.hi
         if hi <= lo:
             return 0
-        base = int(self._cum[lo - 1]) if lo else 0
-        return int(self._cum[hi - 1]) - base
+        base = self._cum[lo - 1] if lo else 0
+        return self._cum[hi - 1] - base
 
     # -- Record materialization (compat boundary; counted) -------------
 
@@ -473,6 +484,10 @@ class TopicMeta:
     def __init__(self, name: str, parts: list[PartitionMeta]) -> None:
         self.name = name
         self.parts = parts
+        # shared by assigned_partitions() for implicit solo groups —
+        # the partition list is fixed at create_topic time and callers
+        # only iterate, so one list serves every fetch
+        self._all_parts = list(range(len(parts)))
 
     @property
     def n_partitions(self) -> int:
@@ -634,6 +649,11 @@ class Cluster:
         self.mode = mode
         self.cfg = {**DEFAULTS, **{k: v for k, v in cfg.items()
                                    if k in DEFAULTS}}
+        # fetch-path cfg pins: cfg is frozen after construction, so the
+        # hot per-fetch dict lookups collapse to attribute reads
+        self._fetch_bytes = self.cfg["fetch_bytes"]
+        self._fetch_min_bytes = self.cfg["fetch_min_bytes"]
+        self._fetch_max_wait_s = self.cfg["fetch_max_wait_s"]
         self.broker_hosts = list(broker_hosts)
         self.controller_host = self.broker_hosts[0] if broker_hosts else None
         # logs[broker][(topic, partition)] -> ReplicaLog
@@ -758,7 +778,7 @@ class Cluster:
         gs = self.groups.get((self.group_of(consumer), topic))
         if gs is None or not gs.explicit:
             # implicit solo group: owns everything, never rebalances
-            return list(range(meta.n_partitions))
+            return meta._all_parts
         if gs.assignment is None:
             self._assign(gs)
         return gs.assignment.get(consumer.name, [])
@@ -1038,8 +1058,14 @@ class Cluster:
         # stream makes follower order part of the deterministic contract
         # (ISR is always a subset of replicas), and set order varies with
         # per-process hash randomization — sweep caching would diverge.
-        for b in [x for x in pm.replicas if x in pm.isr and x != broker]:
-            delay, lost = eng.net.transfer(broker, b, nbytes, rep_rng)
+        # The fan-out is one homogeneous (src, nbytes) cohort, so the
+        # delay arithmetic runs as a single vectorized transfer_many
+        # (bit-identical to per-follower transfer calls, RNG order
+        # included).
+        followers = [x for x in pm.replicas if x in pm.isr and x != broker]
+        for b, (delay, lost) in zip(
+                followers,
+                eng.net.transfer_many(broker, followers, nbytes, rep_rng)):
             if delay is None or lost:
                 continue   # follower unreachable; controller manages ISR
             eng.monitor.broker_tx(broker, nbytes)
@@ -1123,8 +1149,8 @@ class Cluster:
         # fetch_max_wait_s.  Disabled at the defaults (min_bytes=1 or
         # max_wait=0): this branch is never entered, so the event stream
         # is bit-identical to the pre-feature broker.
-        min_b = self.cfg["fetch_min_bytes"]
-        max_w = self.cfg["fetch_max_wait_s"]
+        min_b = self._fetch_min_bytes
+        max_w = self._fetch_max_wait_s
         if min_b > 1 and max_w > 0:
             hkey = (topic, consumer.name)
             avail = self._avail_bytes(consumer, topic)
@@ -1186,9 +1212,12 @@ class Cluster:
         eng = self.engine
         pm = self.topics[topic].parts[part]
         chost = consumer.host
-        leader = self._client_leader(chost, consumer.name, topic, part)
+        # inline the metadata-cache hit (hot: one lookup per poll/part)
+        leader = self._client_meta.get((consumer.name, topic, part))
         if leader is None:
-            return FETCH_BLOCKED
+            leader = self._client_leader(chost, consumer.name, topic, part)
+            if leader is None:
+                return FETCH_BLOCKED
         if eng.now < pm.electing_until and leader == pm.leader:
             return FETCH_BLOCKED
         rtt, lost = eng.net.transfer(chost, leader, 64, rng)
@@ -1207,13 +1236,14 @@ class Cluster:
         if off >= log.hw:
             return FETCH_EMPTY
         # fetch.max.bytes: cap one response (remainder on the next fetch)
-        cap = self.cfg["fetch_bytes"]
+        cap = self._fetch_bytes
         # backpressure: a bounded subscriber (pause policy) advertises
         # its remaining ingest-queue budget; the take is then *strict*
         # (crossing row excluded) so delivered-plus-queued bytes provably
         # stay within the configured bound.  budget=None — the default —
         # takes the branch below, byte-identical to the legacy path.
-        budget = getattr(consumer, "fetch_budget", lambda: None)()
+        fb = getattr(consumer, "fetch_budget", None)
+        budget = fb() if fb is not None else None
         if budget is None:
             n, nbytes = log.batch.take_by_bytes(off, log.hw, cap)
         else:

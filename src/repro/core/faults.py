@@ -168,9 +168,11 @@ def _apply(engine, f: FaultCfg) -> None:
         key = ("gray",) + tuple(sorted((a, b)))
         active = _push(engine, key, link.loss_pct, f)
         # the effective loss is the max over the overlapping faults (and
-        # never below the spec baseline)
-        link.loss_pct = max(_stacks(engine)[key]["baseline"],
-                            max(x.loss_pct for x in active))
+        # never below the spec baseline); applied through the network's
+        # loss seam so routing tables drop their composed keep rows
+        net.set_link_loss(a, b,
+                          max(_stacks(engine)[key]["baseline"],
+                              max(x.loss_pct for x in active)))
         mon.event(t, "gray_loss", a=a, b=b, loss=f.loss_pct)
         if f.duration:
             engine.schedule(f.duration,
@@ -207,12 +209,12 @@ def _heal_host(engine, key: tuple, h: str, f: FaultCfg) -> None:
 
 def _heal_gray(engine, key: tuple, a: str, b: str, f: FaultCfg) -> None:
     active, baseline = _pop(engine, key, f)
-    link = engine.net.link(a, b)
     if active:
-        link.loss_pct = max(baseline,
-                            max(x.loss_pct for x in active))
+        engine.net.set_link_loss(a, b,
+                                 max(baseline,
+                                     max(x.loss_pct for x in active)))
     else:
-        link.loss_pct = baseline
+        engine.net.set_link_loss(a, b, baseline)
         engine.monitor.event(engine.now, "gray_heal", a=a, b=b)
 
 

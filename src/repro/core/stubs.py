@@ -241,18 +241,20 @@ class ConsumerBase(DeliveryLoop):
         # load shedding happens at admission (offsets already advanced,
         # so shed rows are consumed-but-dropped, never replayed); a
         # no-op for the default unbounded / pause configurations
-        records = self.bp_admit(eng, records)
+        if self.queue_bytes_max > 0:
+            records = self.bp_admit(eng, records)
         # columnar fast path: O(1) byte accounting off the prefix sums,
         # payload-pointer access only — no Record materialization
         if isinstance(records, BatchView):
             nbytes = records.total_bytes()
         else:
             nbytes = sum(r.size for r in records)
-        if self.queue_bytes_max > 0 and not len(records):
+        k = len(records)
+        if self.queue_bytes_max > 0 and not k:
             return      # whole batch shed
-        self.n_received += len(records)
+        self.n_received += k
         self.bytes_received += nbytes
-        cost = (PER_RECORD_S + self.per_record_cost) * len(records) \
+        cost = (PER_RECORD_S + self.per_record_cost) * k \
             + PER_BYTE_S * nbytes
         ep = self._bp_epoch
 

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import hashlib
 import math
+from bisect import bisect_right
 from dataclasses import dataclass
 from typing import Optional
 
@@ -66,6 +67,8 @@ _N_DECADES = 9
 _EDGES = HIST_LO * np.power(
     10.0, np.arange(_N_DECADES * BINS_PER_DECADE + 1) / BINS_PER_DECADE)
 N_BINS = _EDGES.size + 1                      # + underflow + overflow
+# plain-float copy for the scalar (bisect) fast path in add_many
+_EDGES_LIST = [float(e) for e in _EDGES]
 
 
 class LatencyHistogram:
@@ -80,25 +83,51 @@ class LatencyHistogram:
     pins were re-captured).
     """
 
-    __slots__ = ("counts", "n", "sum")
+    __slots__ = ("_counts", "n", "sum")
 
     def __init__(self) -> None:
-        self.counts = np.zeros(N_BINS, dtype=np.int64)
+        # python-int bins: the per-delivery increment path indexes a
+        # plain list (a numpy scalar += is ~10x slower); ``counts``
+        # materializes the familiar int64 array on demand
+        self._counts = [0] * N_BINS
         self.n = 0
         self.sum = 0.0
 
+    @property
+    def counts(self) -> np.ndarray:
+        return np.asarray(self._counts, dtype=np.int64)
+
     def add(self, value: float) -> None:
-        i = int(np.searchsorted(_EDGES, value, side="right"))
-        self.counts[i] += 1
+        self._counts[bisect_right(_EDGES_LIST, value)] += 1
         self.n += 1
         self.sum += value
 
     def add_many(self, values) -> None:
+        # scalar fast path for the common tiny delivery batch: bisect
+        # beats the asarray+searchsorted+bincount round trip by ~10x.
+        # Bitwise-identical to the vector path: bisect_right == side=
+        # "right", and the local left-to-right accumulation reproduces
+        # np.sum's sequential order exactly (numpy switches to pairwise
+        # partials above 8 elements — hence the cutoff, verified by
+        # tests/test_telemetry.py's histogram equivalence fuzz).
+        if type(values) is list and len(values) <= 7:
+            if not values:
+                return
+            counts = self._counts
+            s = values[0]
+            counts[bisect_right(_EDGES_LIST, values[0])] += 1
+            for v in values[1:]:
+                counts[bisect_right(_EDGES_LIST, v)] += 1
+                s += v
+            self.n += len(values)
+            self.sum += s
+            return
         arr = np.asarray(values, dtype=np.float64)
         if arr.size == 0:
             return
         idx = np.searchsorted(_EDGES, arr, side="right")
-        self.counts += np.bincount(idx, minlength=N_BINS)
+        bc = np.bincount(idx, minlength=N_BINS)
+        self._counts = [a + b for a, b in zip(self._counts, bc.tolist())]
         self.n += int(arr.size)
         self.sum += float(arr.sum())
 
@@ -121,7 +150,7 @@ class LatencyHistogram:
         rank = min(self.n, max(1, int(math.ceil(q * self.n))))
         cum = 0
         for i in range(N_BINS):
-            cum += int(self.counts[i])
+            cum += self._counts[i]
             if cum >= rank:
                 return self.bin_value(i)
         return self.bin_value(N_BINS - 1)   # unreachable (cum == n)

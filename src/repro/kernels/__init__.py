@@ -1,4 +1,24 @@
-from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, flash_decode
+"""Kernel package: Pallas attention kernels + numpy-first net arithmetic.
 
-__all__ = ["ops", "ref", "flash_attention", "flash_decode"]
+The attention kernels (``ops``/``ref``) pull in jax at import time, so
+they are exposed lazily: ``repro.kernels.netcalc`` (used by the
+deterministic emulator hot path) must be importable without touching
+jax — the warm-pool contract the sweep workers rely on.
+"""
+import importlib
+
+from repro.kernels import netcalc
+
+__all__ = ["netcalc", "ops", "ref", "flash_attention", "flash_decode"]
+
+
+def __getattr__(name):
+    if name in ("ops", "ref"):
+        mod = importlib.import_module(f"repro.kernels.{name}")
+        globals()[name] = mod
+        return mod
+    if name in ("flash_attention", "flash_decode"):
+        fn = getattr(importlib.import_module("repro.kernels.ops"), name)
+        globals()[name] = fn
+        return fn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

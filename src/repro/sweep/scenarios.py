@@ -35,6 +35,10 @@ broker_cfg    dict merged into every broker component (Table I brokerCfg)
 loss_pct      uniform extra loss applied to every link
 reach_cache   per-epoch reachability memoization toggle (default on;
               the scale benchmark's before/after axis)
+route_mode    "table" (default — per-epoch vectorized routing tables)
+              | "ondemand" (legacy per-source SSSP; the parity baseline
+              — results are bit-identical, asserted in CI).
+              reach_cache=0 always implies on-demand recomputation.
 windowed / window_s
               truthy ``windowed`` (or ``window_s > 0``) places one
               stream processor on the last host: topics[0] -> "agg",
@@ -94,6 +98,7 @@ def build_scenario(p: dict) -> PipelineSpec:
         columnar=bool(p.get("columnar", True)),
         scheduler=p.get("scheduler", "calendar"))
     spec.network.reach_cache = bool(p.get("reach_cache", True))
+    spec.network.route_mode = str(p.get("route_mode", "table"))
     if p.get("loss_pct"):
         for a, b in spec.network.g.edges:
             spec.network.link(a, b).loss_pct = float(p["loss_pct"])

@@ -14,7 +14,12 @@ content-hash cache relies on — see ``tests/test_topologies.py``):
 - ``g.graph["hosts"]`` lists hosts in deterministic creation order
   (component placement walks this list);
 - the graph is connected, and a fixed ``(n_hosts, seed, kwargs)``
-  reproduces the *identical* graph — nodes, edges and link attributes.
+  reproduces the *identical* graph — nodes, edges and link attributes,
+  **and node insertion order**: the vectorized routing tables in
+  ``repro.core.netem`` assign each node the dense integer index of its
+  insertion position (see :func:`node_index`), so reordering node
+  creation would shuffle the sweep runner's content-hash cache even
+  though routing itself is order-independent.
 
 Generators:
 
@@ -251,3 +256,15 @@ def generate(name: str, n_hosts: int, *, seed: int = 0, **kw) -> nx.Graph:
 def hosts_of(g: nx.Graph) -> list[str]:
     """Hosts in deterministic creation order (placement contract)."""
     return list(g.graph["hosts"])
+
+
+def node_index(g: nx.Graph) -> dict[str, int]:
+    """Node name -> dense integer index, in graph insertion order.
+
+    This is the exact index space the per-epoch routing tables
+    (``repro.core.netem``, ``route_mode="table"``) key their distance /
+    latency / bottleneck rows on — switches included, not just hosts.
+    Exposed so benchmarks and analysis code can translate vectorized
+    routing state back to names without re-deriving the convention.
+    """
+    return {n: i for i, n in enumerate(g.nodes)}
