@@ -58,8 +58,20 @@ Schema::
       "reach_cache_compare": {n_hosts, horizon_sim_s,
                               events_uncached, events_cached,
                               computes_uncached, computes_cached,
-                              probe_reduction, events_equal}
+                              probe_reduction, events_equal},
+      "fetch_mode_compare": {n_hosts, horizon_sim_s,
+                             events_legacy, events_fused,
+                             records_delivered, event_reduction,
+                             fingerprint_legacy, fingerprint_fused,
+                             fingerprints_equal}
     }
+
+4. **Fused fetch cohorts** (PR 9) — ``fetch_mode="fused"`` (the
+   default) coalesces same-tick wakeup/deliver events into cohort
+   events.  The before/after pair runs one identical chaotic
+   multi-partition scenario under both modes, **asserts bit-identity**
+   of every metric outside the event-loop counters, and gates the
+   deterministic event-count reduction (``MIN_FETCH_EVENT_REDUCTION``).
 """
 from __future__ import annotations
 
@@ -85,6 +97,10 @@ from benchmarks.common import emit  # noqa: E402
 # reductions to avoid flaking, and both ratios are deterministic counts
 MIN_PROBE_REDUCTION = 5.0
 MIN_ROUTE_SOLVE_REDUCTION = 5.0
+# fused fetch cohorts merge same-tick wakeup/deliver events; the
+# reduction is an exact event-count ratio (never wall clock), gated
+# below the observed 1.27x (60-node smoke) / 1.39x (200-node) compare
+MIN_FETCH_EVENT_REDUCTION = 1.2
 
 
 def scale_base(horizon: float) -> dict:
@@ -104,11 +120,18 @@ def scale_base(horizon: float) -> dict:
 # route modes *by design* (it is the work the tables amortize away)
 _NONDET_KEYS = frozenset(TIMING_KEYS) | {"route_solves", "phases"}
 
+# the event-loop counters that fused cohort delivery merges *by
+# design*; everything else must stay bit-identical across fetch modes
+_EVENT_KEYS = frozenset({"engine_events", "events_scheduled",
+                         "events_cancelled", "profile_counts",
+                         "profile_wall"})
 
-def metrics_fingerprint(m: dict) -> str:
+
+def metrics_fingerprint(m: dict, exclude: frozenset = _NONDET_KEYS
+                        ) -> str:
     """Hash over the deterministic metrics of one engine run (the
     single-scenario analogue of ``SweepResults.fingerprint``)."""
-    det = {k: v for k, v in m.items() if k not in _NONDET_KEYS}
+    det = {k: v for k, v in m.items() if k not in exclude}
     blob = json.dumps(det, sort_keys=True, default=repr)
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -192,6 +215,44 @@ def _compare_route_modes(n_hosts: int, horizon: float) -> dict:
     }
 
 
+def _compare_fetch_modes(n_hosts: int, horizon: float) -> dict:
+    """Identical chaotic multi-partition scenario under both fetch
+    modes: bit-identity of every non-event-loop metric asserted, the
+    deterministic event-count reduction gated (PR 9)."""
+    runs = {}
+    for mode in ("legacy", "fused"):
+        m = _run_sized(n_hosts, horizon,
+                       extra={"fetch_mode": mode, "chaos": 2,
+                              "partitions": 4})
+        m.pop("phases")
+        runs[mode] = m
+    before, after = runs["legacy"], runs["fused"]
+    excl = _NONDET_KEYS | _EVENT_KEYS
+    fp_b = metrics_fingerprint(before, excl)
+    fp_a = metrics_fingerprint(after, excl)
+    assert fp_b == fp_a, \
+        "fetch modes disagree on deterministic metrics:\n" + "\n".join(
+            f"  {k}: {before[k]!r} != {after[k]!r}"
+            for k in sorted(before)
+            if k not in excl and before[k] != after[k])
+    reduction = before["engine_events"] / max(1, after["engine_events"])
+    assert reduction >= MIN_FETCH_EVENT_REDUCTION, \
+        f"fused fetch regressed: {reduction:.2f}x < " \
+        f"{MIN_FETCH_EVENT_REDUCTION}x event reduction " \
+        f"({before['engine_events']} -> {after['engine_events']} events)"
+    return {
+        "n_hosts": n_hosts,
+        "horizon_sim_s": horizon,
+        "events_legacy": before["engine_events"],
+        "events_fused": after["engine_events"],
+        "records_delivered": after["records_delivered"],
+        "event_reduction": reduction,
+        "fingerprint_legacy": fp_b,
+        "fingerprint_fused": fp_a,
+        "fingerprints_equal": True,
+    }
+
+
 def run(*, smoke: bool = False, full: bool = False, profile: bool = False,
         out: str = "BENCH_sweep_scale.json") -> dict:
     # `full` kept for compat; 400 and 1000 nodes are part of the record
@@ -239,6 +300,14 @@ def run(*, smoke: bool = False, full: bool = False, profile: bool = False,
          f"solves={rm['solves_ondemand']}->{rm['solves_table']};"
          f"path_queries={rm['path_queries']};"
          f"fingerprints_equal={rm['fingerprints_equal']}")
+
+    # fused vs legacy fetch on one identical chaotic scenario (PR 9)
+    results["fetch_mode_compare"] = fm = _compare_fetch_modes(cmp_n, cmp_h)
+    emit("sweep_scale/fetch_mode", 0.0,
+         f"event_reduction={fm['event_reduction']:.2f}x;"
+         f"events={fm['events_legacy']}->{fm['events_fused']};"
+         f"delivered={fm['records_delivered']};"
+         f"fingerprints_equal={fm['fingerprints_equal']}")
 
     # before/after reachability caching on one identical scenario
     pair_sweep = SweepSpec(

@@ -34,6 +34,19 @@ delivery modes and shed policies, gating:
   modes for otherwise-identical params — the chaos schedule and
   producer-side protocol randomness must not see the consumer loop.
 
+``--fetch`` runs the PR 9 fused-cohort gates on a ``fetch_mode`` axis
+over the chaotic bounded-queue grid:
+
+- every metric outside the event-loop counters (``engine_events``,
+  ``events_scheduled``, ``events_cancelled``) bit-identical between
+  ``fetch_mode="fused"`` (the default) and ``"legacy"`` on every other
+  grid point — shed/pause counters, chaos faults and RNG-fed latencies
+  included;
+- per-message sink digests (which consumer got which record, at which
+  offset order) identical across the modes on a direct engine pair;
+- the fused event-count *reduction* on the wakeup rows gated as an
+  exact deterministic ratio (never wall clock).
+
 ``--telemetry`` runs the observability gates (the CI ``obs-smoke`` job):
 
 - telemetry artifacts (series digests, stage-span histograms, flight
@@ -124,6 +137,77 @@ def chaos_main() -> None:
           rows[("wakeup", "drop_oldest")]["records_shed"],
           "| pauses(pause/wakeup):",
           rows[("wakeup", "pause")]["backpressure_pauses"])
+
+
+FETCH_CACHE = ".ci_sweep_fetch"
+
+# PR 9: the chaotic bounded-queue base with multiple partitions per
+# topic so deliver cohorts actually form, crossed with the fetch modes
+fetch_sweep = SweepSpec(
+    name="ci_fetch_smoke",
+    axes={"delivery": ["poll", "wakeup"],
+          "fetch_mode": ["fused", "legacy"]},
+    base={**chaos_sweep.base, "partitions": 4,
+          "shed_policy": "drop_oldest"})
+
+# only the event-loop counters may differ between fetch modes
+FETCH_EVENT_KEYS = ("engine_events", "events_scheduled",
+                    "events_cancelled", "wall_s")
+MIN_SMOKE_FETCH_REDUCTION = 1.05
+
+
+def fetch_main() -> None:
+    """The --fetch gates: fused vs legacy bit-identity on everything
+    but the event-loop counters, sink-digest identity, and the exact
+    event-reduction ratio on the wakeup rows."""
+    import hashlib
+
+    from repro.core.engine import Engine
+    from repro.sweep.scenarios import build_scenario
+
+    shutil.rmtree(FETCH_CACHE, ignore_errors=True)
+    a = run_sweep(fetch_sweep, workers=2, cache_dir=FETCH_CACHE,
+                  progress=print)
+    assert len(a) == 4 and a.n_cached == 0
+    rows = {(r["params"]["delivery"], r["params"]["fetch_mode"]):
+            r["metrics"] for r in a.rows}
+    for delivery in ("poll", "wakeup"):
+        fused = rows[(delivery, "fused")]
+        legacy = rows[(delivery, "legacy")]
+        diffs = [k for k in legacy
+                 if k not in FETCH_EVENT_KEYS and fused[k] != legacy[k]]
+        assert not diffs, \
+            f"fetch modes disagree on {delivery}: " + ", ".join(
+                f"{k}: {fused[k]!r} != {legacy[k]!r}" for k in diffs)
+        assert fused["engine_events"] <= legacy["engine_events"], \
+            f"fused scheduled MORE events on {delivery}"
+        assert fused["records_shed"] > 0, \
+            f"the overload grid must exercise shedding ({delivery})"
+    reduction = (rows[("wakeup", "legacy")]["engine_events"]
+                 / rows[("wakeup", "fused")]["engine_events"])
+    assert reduction >= MIN_SMOKE_FETCH_REDUCTION, \
+        f"fused wakeup event reduction {reduction:.2f}x < " \
+        f"{MIN_SMOKE_FETCH_REDUCTION}x"
+
+    # sink-digest identity on a direct engine pair: the per-message
+    # delivery map (which consumers received each record, when) hashes
+    # identically — record streams, not just aggregates, must agree
+    digests = {}
+    for mode in ("fused", "legacy"):
+        p = {**fetch_sweep.base, "delivery": "wakeup",
+             "fetch_mode": mode}
+        eng = Engine(build_scenario(p), seed=int(p["seed"]))
+        mon = eng.run(until=float(p["horizon"]))
+        blob = repr([(mid, sorted(m.deliveries.items()))
+                     for mid, m in sorted(mon.msgs.items())])
+        digests[mode] = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    assert digests["fused"] == digests["legacy"], \
+        f"sink digests diverged across fetch modes: {digests}"
+    print(a.table())
+    print(f"fetch smoke ok | wakeup event reduction: {reduction:.2f}x "
+          f"| sink digest: {digests['fused']} "
+          f"| shed(wakeup/fused): "
+          f"{rows[('wakeup', 'fused')]['records_shed']}")
 
 
 tel_sweep = SweepSpec(
@@ -222,5 +306,7 @@ if __name__ == "__main__":
         chaos_main()
     elif "--telemetry" in sys.argv[1:]:
         telemetry_main()
+    elif "--fetch" in sys.argv[1:]:
+        fetch_main()
     else:
         main()

@@ -90,6 +90,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.kernels import cohort as cohort_kernels
+
 # Protocol timing defaults (seconds); overridable via brokerCfg.
 DEFAULTS = dict(
     session_timeout=6.0,        # leader-failure detection (ZK session / raft)
@@ -710,6 +712,17 @@ class Cluster:
         # `now - held < max_wait` loses to rounding about a third of
         # the time and would re-park the waiter with no timer left.
         self._hold_deadline: dict[tuple[str, str], float] = {}
+        # fetch_mode="fused" (default): one cohort deliver event per
+        # (subscriber, fetch cycle, landing time) and one cohort wakeup
+        # event per _notify fan-out, instead of one event per partition
+        # / per waiter.  Execution order is provably identical (see
+        # Engine.schedule_cohort); only the event-loop counters differ.
+        self._fused = str(getattr(engine, "fetch_mode", "fused")) \
+            == "fused"
+        # assigned-partitions memo: (consumer, topic) -> (generation,
+        # sorted partition tuple); invalidated by the generation bump in
+        # _assign (rebalance), never recomputed on the fetch hot path
+        self._ap_cache: dict[tuple[str, str], tuple[int, tuple]] = {}
 
     def _log(self, broker: str, topic: str, partition: int = 0
              ) -> ReplicaLog:
@@ -770,18 +783,32 @@ class Cluster:
     def group_of(self, consumer) -> str:
         return getattr(consumer, "group", None) or consumer.name
 
-    def assigned_partitions(self, consumer, topic: str) -> list[int]:
-        """Partitions this subscriber currently owns (deterministic)."""
+    def assigned_partitions(self, consumer, topic: str):
+        """Partitions this subscriber currently owns (deterministic).
+
+        Memoized per (consumer, topic) against the group's rebalance
+        generation — the fetch hot path and ``_avail_bytes`` used to
+        recompute the group-dict chain on every call.  A rebalance bumps
+        ``gs.generation`` (see ``_assign``), which invalidates the entry
+        on the next lookup; solo groups never rebalance and share the
+        topic's precomputed ``_all_parts``.
+        """
         meta = self.topics.get(topic)
         if meta is None:
-            return []
+            return ()
         gs = self.groups.get((self.group_of(consumer), topic))
         if gs is None or not gs.explicit:
             # implicit solo group: owns everything, never rebalances
             return meta._all_parts
+        key = (consumer.name, topic)
+        cached = self._ap_cache.get(key)
+        if cached is not None and cached[0] == gs.generation:
+            return cached[1]
         if gs.assignment is None:
             self._assign(gs)
-        return gs.assignment.get(consumer.name, [])
+        parts = tuple(gs.assignment.get(consumer.name, ()))
+        self._ap_cache[key] = (gs.generation, parts)
+        return parts
 
     def _assign(self, gs: GroupState,
                 live: Optional[tuple] = None) -> None:
@@ -836,15 +863,26 @@ class Cluster:
         self._waiters.setdefault(topic, {})[consumer.name] = consumer
 
     def _notify(self, topic: str) -> None:
-        """Wake every parked subscriber of ``topic`` (zero-delay events)."""
+        """Wake every parked subscriber of ``topic``.
+
+        Legacy mode schedules one zero-delay event per waiter; fused
+        mode drains the fan-out as one same-tick cohort event running
+        the same wakeups in the same order (Engine.schedule_cohort —
+        the k events would have held consecutive sequence numbers, so
+        nothing could pop between them and anything the wakeups
+        schedule keeps its relative order either way)."""
         waiting = self._waiters.get(topic)
         if not waiting:
             return
         eng = self.engine
         consumers = list(waiting.values())
         waiting.clear()
-        for c in consumers:
-            eng.schedule(0.0, lambda c=c: c.on_wakeup(eng, topic))
+        if self._fused:
+            eng.schedule_cohort(0.0, [c.on_wakeup for c in consumers],
+                                eng, topic)
+        else:
+            for c in consumers:
+                eng.schedule(0.0, lambda c=c: c.on_wakeup(eng, topic))
 
     # ------------------------------------------------------------------
     # Client metadata (stale caches refreshed via reachable brokers)
@@ -1131,15 +1169,23 @@ class Cluster:
         any partition byte-capped → ``delivered_more``; else any blocked
         → ``blocked`` (interval retries under faults); else park.
         """
-        prof = self.engine.profiler
-        if prof is None:
-            return self._fetch(consumer, topic)
-        t0 = time.perf_counter()
-        st = self._fetch(consumer, topic)
-        prof.add("fetch", time.perf_counter() - t0)
-        return st
+        return self._fetch(consumer, topic)
 
     def _fetch(self, consumer, topic: str) -> str:
+        """One fused fetch cycle over every owned partition.
+
+        The per-partition work is a single flat pass with every
+        per-fetch-invariant lookup (group, cfg, metadata dicts, budget
+        hook, telemetry) hoisted out of the loop; byte accounting reads
+        the ``cum_list`` prefix-sum mirrors.  RNG draw order — one
+        control RTT then one data transfer per partition, in assignment
+        order — is exactly the legacy sequence, so loss/fault behavior
+        is untouched.  ``fetch_mode`` only controls how the responses
+        are *scheduled*: legacy posts one deliver event per partition,
+        fused groups consecutive equal-landing-time responses into
+        cohort events (``t_land`` is non-decreasing across the loop, so
+        equal values are always adjacent — see kernels/cohort.py).
+        """
         eng = self.engine
         rng = eng.client_rng(consumer.name)
         # fetch.min.bytes lingering: with fewer than fetch_min_bytes
@@ -1151,7 +1197,9 @@ class Cluster:
         # is bit-identical to the pre-feature broker.
         min_b = self._fetch_min_bytes
         max_w = self._fetch_max_wait_s
+        prof = eng.profiler
         if min_b > 1 and max_w > 0:
+            t0 = time.perf_counter() if prof is not None else 0.0
             hkey = (topic, consumer.name)
             avail = self._avail_bytes(consumer, topic)
             if 0 < avail < min_b:
@@ -1160,19 +1208,179 @@ class Cluster:
                     self._hold_deadline[hkey] = eng.now + max_w
                     eng.schedule(max_w,
                                  lambda: self._expire_hold(hkey))
+                    if prof is not None:
+                        prof.add_wall("fetch_ctl",
+                                      time.perf_counter() - t0)
                     return FETCH_EMPTY
                 if eng.now < deadline:
+                    if prof is not None:
+                        prof.add_wall("fetch_ctl",
+                                      time.perf_counter() - t0)
                     return FETCH_EMPTY
             self._hold_deadline.pop(hkey, None)
+            if prof is not None:
+                prof.add_wall("fetch_ctl", time.perf_counter() - t0)
+        parts = self.assigned_partitions(consumer, topic)
+        if not parts:
+            return FETCH_EMPTY
+        # --- hoisted per-fetch invariants (one lookup per poll, not
+        # one per partition per poll) ---------------------------------
+        now = eng.now
+        net = eng.net
+        mon = eng.monitor
+        tel = eng.telemetry
+        columnar = self.columnar
+        pms = self.topics[topic].parts
+        cname = consumer.name
+        chost = consumer.host
+        owner = self.group_of(consumer)
+        cmeta = self._client_meta
+        offs = self._consumer_offsets
+        logs = self.logs
+        belief = self._belief
+        cap = self._fetch_bytes
+        fb = getattr(consumer, "fetch_budget", None)
+        inflight = self._inflight_until
+        ikey = (topic, cname)
+        fused = self._fused
+        pend: Optional[list] = [] if fused else None
+        tx_hosts: list = []             # per-response leader/bytes for
+        tx_bytes: list = []             # one batched broker_tx tally
         any_more = any_blocked = any_delivered = False
-        for p in self.assigned_partitions(consumer, topic):
-            st = self._fetch_partition(consumer, topic, p, rng)
-            if st == FETCH_DELIVERED_MORE:
-                any_more = True
-            elif st == FETCH_BLOCKED:
+        for part in parts:
+            # -- control phase: metadata resolution + request RTT ------
+            t0 = time.perf_counter() if prof is not None else 0.0
+            pm = pms[part]
+            leader = cmeta.get((cname, topic, part))
+            if leader is None:
+                leader = self._client_leader(chost, cname, topic, part)
+            ok = leader is not None
+            if ok:
+                if now < pm.electing_until and leader == pm.leader:
+                    ok = False
+                else:
+                    rtt, lost = net.transfer(chost, leader, 64, rng)
+                    if rtt is None or lost:
+                        self._invalidate_client(cname, topic, part)
+                        ok = False
+                    elif not belief[(leader, topic, part)][0]:
+                        # NOT_LEADER: stale client metadata
+                        self._invalidate_client(cname, topic, part)
+                        ok = False
+            if prof is not None:
+                prof.add("fetch_ctl", time.perf_counter() - t0)
+            if not ok:
                 any_blocked = True
-            elif st == FETCH_DELIVERED:
+                continue
+            # -- take phase: offset/byte bookkeeping + response --------
+            t1 = time.perf_counter() if prof is not None else 0.0
+            log = logs[leader].get((topic, part))
+            if log is None:
+                if prof is not None:
+                    prof.add("fetch_take", time.perf_counter() - t1)
+                continue                            # empty partition
+            okey = (topic, part, owner)
+            off = offs[okey]
+            hw = log.hw
+            if off >= hw:
+                if prof is not None:
+                    prof.add("fetch_take", time.perf_counter() - t1)
+                continue                            # drained partition
+            batchlog = log.batch
+            # fetch.max.bytes caps one response (remainder next fetch);
+            # a bounded subscriber (pause policy) additionally caps the
+            # take at its remaining ingest budget (strict — see
+            # take_within_bytes), byte-identical to the legacy path at
+            # the budget=None default
+            budget = fb() if fb is not None else None
+            if budget is None:
+                n, nbytes = batchlog.take_by_bytes(off, hw, cap)
+            else:
+                n, nbytes = batchlog.take_within_bytes(
+                    off, hw, min(cap, budget))
+                if n == 0:
+                    if consumer.queue_empty():
+                        # a single record larger than the bound:
+                        # deliver it anyway rather than deadlock
+                        # (documented overshoot)
+                        n, nbytes = batchlog.take_by_bytes(
+                            off, hw, min(cap, budget))
+                    else:
+                        # committed rows remain but the budget cannot
+                        # admit the next one: flag the subscriber
+                        # starved so its loop parks paused instead of
+                        # busy-polling; report byte-capped so no waiter
+                        # is parked either way
+                        consumer.bp_starve()
+                        any_more = True
+                        if prof is not None:
+                            prof.add("fetch_take",
+                                     time.perf_counter() - t1)
+                        continue
+            delay, lost = net.transfer(leader, chost, nbytes, rng)
+            if delay is None or lost:
+                any_blocked = True
+                if prof is not None:
+                    prof.add("fetch_take", time.perf_counter() - t1)
+                continue
+            offs[okey] = off + n
+            if budget is not None:
+                consumer.bp_reserve(nbytes)
+            tx_hosts.append(leader)
+            tx_bytes.append(nbytes)
+            # the zero-copy delivery boundary: a BatchView over the
+            # fetched rows (stable under later log mutations).  The
+            # legacy record path materializes it eagerly, exactly like
+            # the old records_slice, and pays the per-row counter.
+            view = BatchView(batchlog, topic, off, off + n, part,
+                             counter=self)
+            batch = view if columnar else view.to_records()
+            mids = view.msg_ids()
+            # stage spans: produce→fetch at request time, produce→
+            # deliver at landing time; per-view inserts (one histogram
+            # float accumulation per response — never concatenated
+            # across views, per the cohort contract in ROADMAP.md)
+            pts = view.produce_time if tel is not None else None
+            if tel is not None:
+                tel.span_many("fetch", topic, now - pts)
+            # TCP-ordered responses: a small later response must not
+            # overtake a big in-flight one.  All partitions of a
+            # subscription multiplex over the one connection, so t_land
+            # is non-decreasing across this loop.
+            t_land = max(now + rtt + delay, inflight.get(ikey, 0.0))
+            inflight[ikey] = t_land
+            if fused:
+                pend.append((t_land, batch, mids, pts))
+            else:
+                eng.schedule(
+                    t_land - now,
+                    lambda b=batch, m=mids, p=pts:
+                        self._deliver_one(consumer, topic, b, m, p))
+            if prof is not None:
+                prof.add("fetch_take", time.perf_counter() - t1)
+            if off + n < hw:
+                any_more = True
+            else:
                 any_delivered = True
+        if tx_hosts:
+            # integer per-leader byte tallies: associative, so the
+            # batched form is fingerprint-identical to per-partition
+            # broker_tx calls (kernels/cohort.py seam)
+            for h, nb in cohort_kernels.int_tallies(
+                    tx_hosts, tx_bytes).items():
+                mon.broker_tx(h, nb)
+        if pend:
+            # one cohort deliver event per distinct landing time; the
+            # per-partition events it replaces would have carried
+            # consecutive sequence numbers, so executing the views in
+            # order inside one event preserves the pop order exactly
+            for lo, hi in cohort_kernels.group_spans(
+                    [p[0] for p in pend]):
+                group = pend[lo:hi]
+                eng.schedule(
+                    group[0][0] - now,
+                    lambda g=group:
+                        self._deliver_cohort(consumer, topic, g))
         if any_more:
             return FETCH_DELIVERED_MORE
         if any_blocked:
@@ -1181,17 +1389,29 @@ class Cluster:
 
     def _avail_bytes(self, consumer, topic: str) -> int:
         """Committed bytes past the group's offsets over owned partitions
-        (broker-side view; drives the fetch.min.bytes hold decision)."""
+        (broker-side view; drives the fetch.min.bytes hold decision).
+
+        Reads the python-int ``cum_list`` prefix-sum mirror directly —
+        two list indexings per partition per hold check instead of the
+        ``bytes_between`` call chain — over the memoized assignment.
+        The arithmetic is identical (``bytes_between`` is exactly this
+        expression), so the hold/expiry event stream is unchanged
+        (asserted in tests/test_fetch_batching.py).
+        """
         owner = self.group_of(consumer)
+        offs = self._consumer_offsets
+        pms = self.topics[topic].parts
+        logs = self.logs
         total = 0
         for p in self.assigned_partitions(consumer, topic):
-            pm = self.topics[topic].parts[p]
-            log = self.logs[pm.leader].get((topic, p))
+            log = logs[pms[p].leader].get((topic, p))
             if log is None:
                 continue
-            off = self._consumer_offsets.get((topic, p, owner), 0)
-            if off < log.hw:
-                total += log.batch.bytes_between(off, log.hw)
+            hw = log.hw
+            off = offs.get((topic, p, owner), 0)
+            if off < hw:
+                cum = log.batch.cum_list
+                total += cum[hw - 1] - (cum[off - 1] if off else 0)
         return total
 
     def _expire_hold(self, hkey: tuple[str, str]) -> None:
@@ -1207,107 +1427,54 @@ class Cluster:
             eng = self.engine
             eng.schedule(0.0, lambda: c.on_wakeup(eng, topic))
 
-    def _fetch_partition(self, consumer, topic: str, part: int,
-                         rng) -> str:
+    def _deliver_one(self, consumer, topic: str, batch, mids,
+                     pts) -> None:
+        """Legacy response landing: one deliver event per partition."""
         eng = self.engine
-        pm = self.topics[topic].parts[part]
-        chost = consumer.host
-        # inline the metadata-cache hit (hot: one lookup per poll/part)
-        leader = self._client_meta.get((consumer.name, topic, part))
-        if leader is None:
-            leader = self._client_leader(chost, consumer.name, topic, part)
-            if leader is None:
-                return FETCH_BLOCKED
-        if eng.now < pm.electing_until and leader == pm.leader:
-            return FETCH_BLOCKED
-        rtt, lost = eng.net.transfer(chost, leader, 64, rng)
-        if rtt is None or lost:
-            self._invalidate_client(consumer.name, topic, part)
-            return FETCH_BLOCKED
-        if not self._belief[(leader, topic, part)][0]:
-            self._invalidate_client(consumer.name, topic, part)  # NOT_LEADER
-            return FETCH_BLOCKED
-        owner = self.group_of(consumer)
-        okey = (topic, part, owner)
-        log = self.logs[leader].get((topic, part))
-        if log is None:
-            return FETCH_EMPTY
-        off = self._consumer_offsets[okey]
-        if off >= log.hw:
-            return FETCH_EMPTY
-        # fetch.max.bytes: cap one response (remainder on the next fetch)
-        cap = self._fetch_bytes
-        # backpressure: a bounded subscriber (pause policy) advertises
-        # its remaining ingest-queue budget; the take is then *strict*
-        # (crossing row excluded) so delivered-plus-queued bytes provably
-        # stay within the configured bound.  budget=None — the default —
-        # takes the branch below, byte-identical to the legacy path.
-        fb = getattr(consumer, "fetch_budget", None)
-        budget = fb() if fb is not None else None
-        if budget is None:
-            n, nbytes = log.batch.take_by_bytes(off, log.hw, cap)
-        else:
-            n, nbytes = log.batch.take_within_bytes(
-                off, log.hw, min(cap, budget))
-            if n == 0:
-                if consumer.queue_empty():
-                    # a single record larger than the bound: deliver it
-                    # anyway rather than deadlock (documented overshoot)
-                    n, nbytes = log.batch.take_by_bytes(
-                        off, log.hw, min(cap, budget))
-                else:
-                    # committed rows remain but the budget cannot admit
-                    # the next one: flag the subscriber starved so its
-                    # loop parks in the paused state (drain-side resume)
-                    # instead of busy-polling zero-row fetches; report
-                    # byte-capped so no waiter is parked either way
-                    consumer.bp_starve()
-                    return FETCH_DELIVERED_MORE
-        delay, lost = eng.net.transfer(leader, chost, nbytes, rng)
-        if delay is None or lost:
-            return FETCH_BLOCKED
-        self._consumer_offsets[okey] = off + n
-        if budget is not None:
-            consumer.bp_reserve(nbytes)
-        eng.monitor.broker_tx(leader, nbytes)
-        # the zero-copy delivery boundary: a BatchView over the fetched
-        # rows (stable under later log mutations — see BatchView).  The
-        # legacy record path materializes it eagerly, exactly like the
-        # old records_slice, and pays the per-row counter.
-        view = BatchView(log.batch, topic, off, off + n, part,
-                         counter=self)
-        batch = view if self.columnar else view.to_records()
-        mids = view.msg_ids()
-        # stage spans: produce→fetch at request time, produce→deliver at
-        # landing time.  view.produce_time is a stable columnar slice, so
-        # both are one vectorized histogram insert (and identical whether
-        # the subscriber consumes the view or materialized records).
+        prof = eng.profiler
+        t0 = time.perf_counter() if prof is not None else 0.0
+        now = eng.now
+        eng.monitor.delivered_many(mids, consumer.name, now)
         tel = eng.telemetry
-        pts = view.produce_time if tel is not None else None
         if tel is not None:
-            tel.span_many("fetch", topic, eng.now - pts)
+            tel.span_many("deliver", topic, now - pts)
+            tel.lineage_mark(mids, "deliver", now)
+        consumer.on_records(eng, batch)
+        if prof is not None:
+            prof.add("deliver", time.perf_counter() - t0)
 
-        def _deliver():
-            prof = eng.profiler
-            t0 = time.perf_counter() if prof is not None else 0.0
-            eng.monitor.delivered_many(mids, consumer.name, eng.now)
+    def _deliver_cohort(self, consumer, topic: str, group) -> None:
+        """Fused response landing: one event for every response of one
+        fetch cycle that lands at the same instant.
+
+        The monitor/telemetry tallies run per view in legacy order —
+        ``delivered_many`` and ``span_many`` accumulate float histograms
+        whose grouping must not change (the no-concatenation rule in the
+        ROADMAP cohort contract) — then the subscriber ingests the whole
+        cohort through ``on_records_cohort`` (per-view processing, with
+        per-cohort invariants hoisted; see core/subscription.py).
+        """
+        eng = self.engine
+        prof = eng.profiler
+        t0 = time.perf_counter() if prof is not None else 0.0
+        now = eng.now
+        mon = eng.monitor
+        tel = eng.telemetry
+        cname = consumer.name
+        for _t, batch, mids, pts in group:
+            mon.delivered_many(mids, cname, now)
             if tel is not None:
-                tel.span_many("deliver", topic, eng.now - pts)
-                tel.lineage_mark(mids, "deliver", eng.now)
-            consumer.on_records(eng, batch)
-            if prof is not None:
-                prof.add("deliver", time.perf_counter() - t0)
-
-        # TCP-ordered responses: a small later response must not overtake
-        # a big in-flight one, or the consumer would see offsets out of
-        # order (ties keep FIFO order via the heap sequence number).  All
-        # partitions of a subscription multiplex over the one connection.
-        key = (topic, consumer.name)
-        t_land = max(eng.now + rtt + delay,
-                     self._inflight_until.get(key, 0.0))
-        self._inflight_until[key] = t_land
-        eng.schedule(t_land - eng.now, _deliver)
-        return FETCH_DELIVERED_MORE if off + n < log.hw else FETCH_DELIVERED
+                tel.span_many("deliver", topic, now - pts)
+                tel.lineage_mark(mids, "deliver", now)
+        if len(group) == 1:
+            consumer.on_records(eng, group[0][1])
+        else:
+            consumer.on_records_cohort(eng, [g[1] for g in group])
+        if prof is not None:
+            # `deliver` counts stay per-view (cross-mode comparable);
+            # the cohort event's wall and count land in deliver_cohort
+            prof.add("deliver", 0.0, n=len(group))
+            prof.add("deliver_cohort", time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     # Controller: failure detection, election, ISR, preferred rebalance

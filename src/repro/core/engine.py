@@ -114,6 +114,12 @@ class Engine:
         # component changes cannot perturb each other's randomness.
         self._client_rngs: dict[str, random.Random] = {}
         self.delivery_mode = getattr(spec, "delivery", "wakeup")
+        # fetch_mode="fused" (default): the broker coalesces same-tick
+        # deliver/wakeup fan-outs into cohort events (one event, same
+        # execution order); "legacy" keeps one event per partition /
+        # per waiter for parity baselines.  Everything except the
+        # event-loop counters is bit-identical between the two.
+        self.fetch_mode = getattr(spec, "fetch_mode", "fused")
         # columnar delivery (the allocation-free hot path): fetch hands
         # subscribers zero-copy BatchViews; False materializes Record
         # lists at the fetch boundary (the pre-refactor behavior, kept
@@ -219,6 +225,29 @@ class Engine:
 
     def schedule_at(self, t: float, fn: Callable[[], None]) -> EventHandle:
         return self.schedule(t - self.now, fn)
+
+    def schedule_cohort(self, delay: float, fns, *args) -> EventHandle:
+        """Same-tick cohort drain: ONE event that runs ``fns`` in order.
+
+        Replaces a fan-out of k same-timestamp events with a single
+        event occupying the first event's queue position.  Execution
+        order is provably unchanged: the k events would have held
+        consecutive sequence numbers (nothing else is scheduled between
+        the pushes), so no other same-timestamp event could have popped
+        between them, and anything the fns schedule keeps its sequence
+        order relative to both the cohort and each other.  Used by the
+        broker's fused fetch/notify paths (``fetch_mode="fused"``).
+        """
+        if len(fns) == 1:
+            f0 = fns[0]
+            return self.schedule(
+                delay, (lambda: f0(*args)) if args else f0)
+
+        def _drain() -> None:
+            for fn in fns:
+                fn(*args)
+
+        return self.schedule(delay, _drain)
 
     def host_transition(self, host: str, up: bool) -> None:
         """Fault hook: notify a failed/recovered host's runtimes.

@@ -42,6 +42,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.kernels import cohort as cohort_kernels
+
 
 def shed_keep(sizes: list, space: int, policy: str
               ) -> tuple[str, Any, int]:
@@ -435,14 +437,15 @@ class TumblingWindow(_WindowBase):
     def process_cols(self, cols: ColumnBatch, ctx) -> ColumnBatch:
         """Vectorized assignment: one ``floor`` pass computes every pane
         start (``float(math.floor(q)) * w == np.floor(q) * w`` — the
-        same IEEE ops, so pane keys are bit-identical to ``_starts``)."""
+        same IEEE ops, so pane keys are bit-identical to ``_starts``).
+        The arithmetic lives in ``kernels/cohort.py`` (the Pallas-ready
+        cohort seam, shared with the fused fetch path)."""
         n = len(cols)
         if n < 8:
             return _WindowBase.process_cols(self, cols, ctx)
         panes = self.state["panes"]
-        starts = (np.floor(
-            np.asarray(cols.event_times, np.float64) / self.size_s)
-            * self.size_s).tolist()
+        starts = cohort_kernels.pane_starts(
+            cols.event_times, self.size_s).tolist()
         for p, s, et, k, start in zip(cols.payloads, cols.sizes,
                                       cols.event_times, cols.keys,
                                       starts):

@@ -161,10 +161,12 @@ class PipelineSpec:
 
     def __init__(self, *, mode: str = "zk",
                  delivery: str = "wakeup", columnar: bool = True,
-                 scheduler: str = "calendar") -> None:
+                 scheduler: str = "calendar",
+                 fetch_mode: str = "fused") -> None:
         assert mode in ("zk", "kraft"), mode
         assert delivery in ("wakeup", "poll"), delivery
         assert scheduler in ("calendar", "heap"), scheduler
+        assert fetch_mode in ("fused", "legacy"), fetch_mode
         self.hosts: dict[str, HostSpec] = {}
         self.topics: dict[str, TopicCfg] = {}
         self.faults: list[FaultCfg] = []
@@ -189,6 +191,13 @@ class PipelineSpec:
         # event queue backend: "calendar" (bucketed, the hot path) or
         # "heap" (legacy global heap) — pop order is bit-identical
         self.scheduler = scheduler
+        # fetch_mode="fused" (default): one deliver event per
+        # (subscriber, fetch cycle, landing time) cohort and one wakeup
+        # event per _notify fan-out; "legacy" keeps one event per
+        # partition / per waiter.  Every metric except the event-loop
+        # counters is bit-identical between the two (see the ROADMAP
+        # cohort-delivery contract and tests/test_fused_fetch.py).
+        self.fetch_mode = fetch_mode
         self._comp_seq = 0
 
     # ------------------------------------------------------------------
@@ -198,7 +207,8 @@ class PipelineSpec:
     @classmethod
     def from_topology(cls, g: "nx.Graph", *, mode: str = "zk",
                       delivery: str = "wakeup", columnar: bool = True,
-                      scheduler: str = "calendar") -> "PipelineSpec":
+                      scheduler: str = "calendar",
+                      fetch_mode: str = "fused") -> "PipelineSpec":
         """Build a spec from a generated topology graph.
 
         ``g`` follows the ``repro.sweep.topologies`` contract: nodes carry
@@ -207,7 +217,7 @@ class PipelineSpec:
         by the caller (or by ``repro.sweep.scenarios.build_scenario``).
         """
         spec = cls(mode=mode, delivery=delivery, columnar=columnar,
-                   scheduler=scheduler)
+                   scheduler=scheduler, fetch_mode=fetch_mode)
         for n, attrs in g.nodes(data=True):
             if attrs.get("kind", "host") == "switch":
                 spec.add_switch(n)
@@ -462,21 +472,25 @@ def _load_cfg(value: str, base_dir: str) -> dict:
 
 
 def from_graphml(path: str, *, mode: Optional[str] = None,
-                 delivery: Optional[str] = None) -> PipelineSpec:
+                 delivery: Optional[str] = None,
+                 fetch_mode: Optional[str] = None) -> PipelineSpec:
     """Parse a paper-style GraphML description (plus side YAML files).
 
     Table I parity: besides ``topicCfg``/``faultCfg``, graph-level
     attributes may select ``mode`` ("zk"/"kraft"), ``delivery``
-    ("wakeup"/"poll") and a default ``brokerCfg`` (YAML file or inline
-    YAML) applied to every broker node — node-level ``brokerCfg`` entries
-    override the graph-level defaults key-by-key.  Explicit keyword
-    arguments take precedence over graph attributes.
+    ("wakeup"/"poll"), ``fetchMode`` ("fused"/"legacy") and a default
+    ``brokerCfg`` (YAML file or inline YAML) applied to every broker
+    node — node-level ``brokerCfg`` entries override the graph-level
+    defaults key-by-key.  Explicit keyword arguments take precedence
+    over graph attributes.
     """
     g = nx.read_graphml(path)
     base = os.path.dirname(os.path.abspath(path))
     mode = mode or str(g.graph.get("mode", "zk"))
     delivery = delivery or str(g.graph.get("delivery", "wakeup"))
-    spec = PipelineSpec(mode=mode, delivery=delivery)
+    fetch_mode = fetch_mode or str(g.graph.get("fetchMode", "fused"))
+    spec = PipelineSpec(mode=mode, delivery=delivery,
+                        fetch_mode=fetch_mode)
     base_broker_cfg = (_load_cfg(g.graph["brokerCfg"], base)
                        if "brokerCfg" in g.graph else {})
 

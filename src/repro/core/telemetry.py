@@ -252,6 +252,18 @@ class Profiler:
     boundaries (engine loop, netem ``path``, cluster fetch/deliver, SPE
     processing, checkpoints) behind ``is None`` checks, so a run without
     a profiler pays nothing.
+
+    Fetch-path buckets: ``fetch_ctl`` (metadata resolution + control
+    RTT, one count per partition attempt) and ``fetch_take``
+    (offset/byte bookkeeping + response, one count per partition that
+    passed the control phase) replace the former whole-call ``fetch``
+    bucket so the next bottleneck hunt sees which half dominates.
+    ``deliver`` counts one per delivered view in *both* fetch modes;
+    fused mode adds ``deliver_cohort`` (one count + the cohort event's
+    wall per landing).  All counts are deterministic; ``deliver``,
+    ``fetch_ctl`` and ``fetch_take`` are identical across
+    fused/legacy, ``deliver_cohort`` and ``scheduler_pops`` are the
+    intentional event-count deltas.
     """
 
     __slots__ = ("counts", "wall")

@@ -1,15 +1,17 @@
 """Kernel package: Pallas attention kernels + numpy-first net arithmetic.
 
 The attention kernels (``ops``/``ref``) pull in jax at import time, so
-they are exposed lazily: ``repro.kernels.netcalc`` (used by the
-deterministic emulator hot path) must be importable without touching
-jax — the warm-pool contract the sweep workers rely on.
+they are exposed lazily: ``repro.kernels.netcalc`` and
+``repro.kernels.cohort`` (used by the deterministic emulator hot path)
+must be importable without touching jax — the warm-pool contract the
+sweep workers rely on.
 """
 import importlib
 
-from repro.kernels import netcalc
+from repro.kernels import cohort, netcalc
 
-__all__ = ["netcalc", "ops", "ref", "flash_attention", "flash_decode"]
+__all__ = ["cohort", "netcalc", "ops", "ref", "flash_attention",
+           "flash_decode"]
 
 
 def __getattr__(name):

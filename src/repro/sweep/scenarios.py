@@ -39,6 +39,10 @@ route_mode    "table" (default — per-epoch vectorized routing tables)
               | "ondemand" (legacy per-source SSSP; the parity baseline
               — results are bit-identical, asserted in CI).
               reach_cache=0 always implies on-demand recomputation.
+fetch_mode    "fused" (default — one fused fetch cycle per poll, same-tick
+              deliveries coalesced into cohort events) | "legacy"
+              (per-partition deliver events; the parity baseline — all
+              metrics except event-loop counters bit-identical, CI-gated)
 windowed / window_s
               truthy ``windowed`` (or ``window_s > 0``) places one
               stream processor on the last host: topics[0] -> "agg",
@@ -96,7 +100,8 @@ def build_scenario(p: dict) -> PipelineSpec:
     spec = PipelineSpec.from_topology(
         g, mode=p.get("mode", "zk"), delivery=p.get("delivery", "wakeup"),
         columnar=bool(p.get("columnar", True)),
-        scheduler=p.get("scheduler", "calendar"))
+        scheduler=p.get("scheduler", "calendar"),
+        fetch_mode=str(p.get("fetch_mode", "fused")))
     spec.network.reach_cache = bool(p.get("reach_cache", True))
     spec.network.route_mode = str(p.get("route_mode", "table"))
     if p.get("loss_pct"):

@@ -1,0 +1,295 @@
+"""Fused fetch/delivery cohorts (PR 9): fused-vs-legacy parity.
+
+``fetch_mode="fused"`` (the default) runs one fused fetch cycle per
+poll — hoisted lookups, cum_list prefix-sum accounting — and coalesces
+same-tick work into cohort events: one deliver event per (subscriber,
+fetch cycle, landing time) and one wakeup event per ``_notify`` fan-out.
+``fetch_mode="legacy"`` schedules one event per partition / per waiter,
+exactly as before the refactor.
+
+The contract, asserted here across every hard configuration the broker
+supports: **all metrics except the event-loop counters are
+bit-identical** between the modes — delivery tallies, RNG-fed latencies
+at full float precision, degradation counters, rebalance/chaos event
+streams, sink payload sequences — and fused never schedules *more*
+events.  Cohort execution-order equivalence is argued in
+``Engine.schedule_cohort``; the per-view float-accumulation rules are
+the ROADMAP cohort-delivery contract.
+
+Also covers the PR 9 satellites: the memoized ``assigned_partitions``
+rebalance regression and the ``kernels/cohort.py`` helpers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Engine, PipelineSpec
+from repro.kernels import cohort
+from repro.sweep import SweepSpec, run_sweep
+from repro.sweep.scenarios import build_scenario
+
+# the only metrics allowed to differ between fetch modes (plus wall
+# clock): cohort coalescing merges events, nothing else
+EVENT_KEYS = ("engine_events", "events_scheduled", "events_cancelled")
+PROF_KEYS = ("profile_counts", "profile_wall")
+
+
+def run_scenario(p, fetch_mode, seed=0):
+    eng = Engine(build_scenario({**p, "fetch_mode": fetch_mode}),
+                 seed=seed)
+    mon = eng.run(until=float(p["horizon"]))
+    return eng, mon, eng.metrics()
+
+
+def strip(m):
+    skip = set(EVENT_KEYS) | set(PROF_KEYS) | {"wall_s"}
+    return {k: v for k, v in m.items() if k not in skip}
+
+
+def assert_parity(p, seed=0, fewer_events=False):
+    """Run both modes; assert bit-identical non-event metrics and
+    identical monitor event streams; return both (eng, mon, metrics)."""
+    fused = run_scenario(p, "fused", seed)
+    legacy = run_scenario(p, "legacy", seed)
+    assert strip(fused[2]) == strip(legacy[2])
+    assert [(e["kind"], e["t"]) for e in fused[1].events] == \
+        [(e["kind"], e["t"]) for e in legacy[1].events]
+    assert fused[2]["engine_events"] <= legacy[2]["engine_events"]
+    if fewer_events:
+        assert fused[2]["engine_events"] < legacy[2]["engine_events"]
+    return fused, legacy
+
+
+# a scenario where cohorts actually form: multiple partitions per topic
+# (deliver coalescing) and multiple wakeup subscribers per topic
+# (notify coalescing), over a WAN with replication
+BASE = {
+    "topology": "geo_wan", "n_hosts": 10, "n_brokers": 3,
+    "replication": 2, "n_topics": 3, "n_producers": 3,
+    "partitions": 4, "rate_kbps": 64.0, "msg_size": 512,
+    "horizon": 8.0, "seed": 0,
+}
+
+
+# ---------------------------------------------------------------------------
+# Core parity grid: delivery x scheduler
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheduler", ["calendar", "heap"])
+@pytest.mark.parametrize("delivery", ["wakeup", "poll"])
+def test_parity_across_delivery_and_scheduler(delivery, scheduler):
+    p = {**BASE, "delivery": delivery, "scheduler": scheduler}
+    # wakeup mode has multi-waiter notifies -> strictly fewer events
+    assert_parity(p, fewer_events=(delivery == "wakeup"))
+
+
+def test_multi_partition_deliver_cohorts_shrink_poll_events():
+    # with 4 partitions per topic and zero-latency-equal landings rare,
+    # cohorts still form whenever several partitions land together; at
+    # minimum the fused run never schedules more events, and the record
+    # stream is identical
+    p = {**BASE, "delivery": "poll", "rate_kbps": 256.0}
+    (ef, _, mf), (el, _, ml) = assert_parity(p)
+    assert mf["records_delivered"] == ml["records_delivered"] > 0
+
+
+def test_record_mode_parity():
+    # columnar=0 materializes per-row Records at fetch; the fused cycle
+    # must keep the materialization count and payloads identical
+    p = {**BASE, "delivery": "wakeup", "columnar": 0}
+    (ef, _, mf), (el, _, ml) = assert_parity(p, fewer_events=True)
+    # materialization happens at fetch-take, delivery at landing: the
+    # counts differ only by records still in flight at the horizon
+    assert mf["record_objects_materialized"] == \
+        ml["record_objects_materialized"] >= mf["records_delivered"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Consumer groups mid-rebalance
+# ---------------------------------------------------------------------------
+
+
+def group_spec(fetch_mode, delivery="wakeup"):
+    spec = PipelineSpec(delivery=delivery, fetch_mode=fetch_mode)
+    spec.add_switch("s1")
+    spec.add_host("b1").add_link("b1", "s1", lat=1.0, bw=100.0)
+    spec.add_broker("b1")
+    spec.add_topic("t", leader="b1", partitions=4)
+    spec.add_host("p").add_link("p", "s1", lat=1.0, bw=100.0)
+    spec.add_producer("p", "SYNTHETIC", topics=["t"], rateKbps=40.0,
+                      msgSize=500, totalMessages=150, nKeys=8)
+    for h in ("c0", "c1"):
+        spec.add_host(h).add_link(h, "s1", lat=1.0, bw=100.0)
+        spec.add_consumer(h, "STANDARD", topics=["t"], group="g",
+                          pollInterval=0.2)
+    spec.add_fault(10.0, "host_down", "c1", duration=12.0)
+    return spec
+
+
+@pytest.mark.parametrize("delivery", ["wakeup", "poll"])
+def test_group_rebalance_parity(delivery):
+    # a member dies and recovers mid-run: partitions move at committed
+    # offsets through two rebalances.  The fused cycle reads partitions
+    # through the generation-checked memo, so the event stream
+    # (rebalances included), per-message delivery maps and group lag
+    # must match legacy exactly
+    runs = {}
+    for fm in ("fused", "legacy"):
+        eng = Engine(group_spec(fm, delivery), seed=9)
+        mon = eng.run(until=60.0)
+        runs[fm] = (eng, mon)
+    ef, mf = runs["fused"]
+    el, ml = runs["legacy"]
+    assert strip(ef.metrics()) == strip(el.metrics())
+    assert [(e["kind"], e["t"]) for e in mf.events] == \
+        [(e["kind"], e["t"]) for e in ml.events]
+    assert ef.metrics()["group_rebalances"] >= 2
+    for mid, msg in mf.msgs.items():
+        assert msg.deliveries == ml.msgs[mid].deliveries
+
+
+def test_assigned_partitions_memo_tracks_rebalance_generation():
+    # satellite 1 regression: the memo must serve the *current*
+    # assignment after every generation bump — never a stale tuple
+    eng = Engine(group_spec("fused"), seed=9)
+    eng.run(until=60.0)
+    cluster = eng.cluster
+    consumers = list(cluster.subs["t"])
+    gs = cluster.groups[("g", "t")]
+    assert gs.generation >= 3          # initial assign + fail + recover
+    seen = []
+    for c in consumers:
+        a1 = cluster.assigned_partitions(c, "t")
+        a2 = cluster.assigned_partitions(c, "t")
+        assert isinstance(a1, tuple)
+        assert a1 is a2                # memo hit returns the cached tuple
+        assert list(a1) == gs.assignment.get(c.name, [])
+        assert list(a1) == sorted(a1)
+        seen.extend(a1)
+    assert sorted(seen) == [0, 1, 2, 3]     # disjoint cover, no overlap
+    # the cache entry is pinned to the live generation
+    for c in consumers:
+        assert cluster._ap_cache[(c.name, "t")][0] == gs.generation
+
+
+def test_solo_consumers_share_the_topic_partition_tuple():
+    # implicit solo groups never rebalance: every call returns the
+    # topic's precomputed partition tuple, no cache entry needed
+    p = {**BASE, "delivery": "poll"}
+    eng, _, _ = run_scenario(p, "fused")
+    cluster = eng.cluster
+    for topic, consumers in cluster.subs.items():
+        for c in consumers:
+            a1 = cluster.assigned_partitions(c, topic)
+            assert a1 is cluster.assigned_partitions(c, topic)
+            assert list(a1) == list(range(len(cluster.topics[topic].parts)))
+
+
+# ---------------------------------------------------------------------------
+# Bounded queues: backpressure pause + the three shed policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["pause", "drop_oldest",
+                                    "drop_newest", "sample"])
+def test_bounded_queue_parity(policy):
+    # slow consumers + tiny queues force the degradation machinery;
+    # shed/pause decisions happen at admission (per view, in legacy
+    # order), so every degradation counter must match bit-for-bit
+    p = {**BASE, "delivery": "wakeup", "rate_kbps": 256.0,
+         "queue_bytes": 2 << 10, "consumer_cost": 0.1,
+         "shed_policy": policy, "horizon": 10.0}
+    (ef, _, mf), (el, _, ml) = assert_parity(p)
+    if policy == "pause":
+        assert mf["backpressure_pauses"] == ml["backpressure_pauses"] > 0
+        assert mf["records_shed"] == 0
+    else:
+        assert mf["records_shed"] == ml["records_shed"] > 0
+        assert mf["bytes_shed"] == ml["bytes_shed"]
+    assert mf["queue_peak_bytes"] == ml["queue_peak_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# exactly_once recovery under chaos
+# ---------------------------------------------------------------------------
+
+
+def test_exactly_once_recovery_under_chaos_parity():
+    # a checkpointed exactly-once SPE, seeded chaos (flaps, gray loss,
+    # slow hosts, crash/heal) and an spe_down fault: recovery replays
+    # from the snapshot, and the replay/recovery accounting must be
+    # identical under fused fetch
+    p = {**BASE, "delivery": "wakeup", "windowed": 1, "window_s": 1.0,
+         "time_mode": "event", "et_jitter_s": 0.2,
+         "checkpoint_interval": 2.0, "spe_semantics": "exactly_once",
+         "fault": "spe_down", "fault_at": 4.0, "fault_duration": 2.0,
+         "chaos": 1, "horizon": 12.0}
+    (ef, _, mf), (el, _, ml) = assert_parity(p)
+    assert mf["spe_recoveries"] == ml["spe_recoveries"] >= 1
+    assert mf["checkpoint_count"] == ml["checkpoint_count"] > 0
+    assert mf["recovered_duplicates"] == ml["recovered_duplicates"]
+    assert mf["windows_fired"] == ml["windows_fired"] > 0
+    assert mf["chaos_faults"] == ml["chaos_faults"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Cross-process fingerprint identity
+# ---------------------------------------------------------------------------
+
+
+def test_fused_fingerprint_identical_across_worker_processes():
+    # the sweep cache mixes rows from different spawned workers: the
+    # fused hot path must hash identically inline and in a worker pool
+    grid = SweepSpec(
+        name="fused_xproc",
+        axes={"delivery": ["poll", "wakeup"]},
+        base={**BASE, "horizon": 5.0, "fetch_mode": "fused"})
+    inline = run_sweep(grid, workers=1, cache_dir=None)
+    pooled = run_sweep(grid, workers=2, cache_dir=None)
+    assert inline.fingerprint() == pooled.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# kernels/cohort.py helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pane_starts_matches_scalar_pane_start():
+    times = [0.0, 0.49, 0.5, 0.999, 1.0, 17.3, 1e6 + 0.25,
+             3.5000000000000004]
+    for size in (0.5, 1.0, 0.25):
+        vec = cohort.pane_starts(times, size)
+        assert vec.dtype == np.float64
+        assert vec.tolist() == [cohort.pane_start(t, size) for t in times]
+
+
+def test_group_spans_small_and_vector_paths_agree():
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 2, 5, 31, 32, 33, 200):
+        vals = rng.integers(0, 4, size=n).tolist()
+        spans = cohort.group_spans(vals)
+        # reference: consecutive equal runs, covering [0, n) in order
+        ref, i = [], 0
+        while i < len(vals):
+            j = i
+            while j < len(vals) and vals[j] == vals[i]:
+                j += 1
+            ref.append((i, j))
+            i = j
+        assert spans == ref
+        assert all(len(set(vals[lo:hi])) == 1 for lo, hi in spans)
+
+
+def test_group_spans_respects_float_landing_times():
+    # equal-t_land runs must group exactly; near-equal floats must not
+    vals = [1.0, 1.0, 1.0 + 1e-12, 2.0, 2.0]
+    assert cohort.group_spans(vals) == [(0, 2), (2, 3), (3, 5)]
+
+
+def test_int_tallies_sums_per_key_in_python_ints():
+    hosts = ["a", "b", "a", "c", "b", "a"]
+    nbytes = [1, 10, 100, 1000, 10000, 100000]
+    got = cohort.int_tallies(hosts, nbytes)
+    assert got == {"a": 100101, "b": 10010, "c": 1000}
+    assert all(type(v) is int for v in got.values())
+    assert cohort.int_tallies([], []) == {}

@@ -56,7 +56,7 @@ def test_partitions_reassigned_on_failure_and_recovery(run):
     assert rec["members"] == [c0, c1]
     assigned = {c.name: eng.cluster.assigned_partitions(c, "t")
                 for c in eng.cluster.subs["t"]}
-    assert assigned[c0] == [0, 1] and assigned[c1] == [2, 3]
+    assert list(assigned[c0]) == [0, 1] and list(assigned[c1]) == [2, 3]
 
 
 def test_no_redelivery_past_commit_point(run):

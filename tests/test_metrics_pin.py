@@ -39,6 +39,19 @@ counts, delivery tallies, path queries, ``latency_count`` — is
 unchanged, which is the telemetry-off inertness proof; the explicit
 key-absence check below pins that no telemetry/profiler field appears
 at the defaults.
+
+PR 9 (fused fetch/delivery cohorts): the default is now
+``fetch_mode="fused"`` — one fused fetch cycle per poll and same-tick
+wakeups/deliveries coalesced into cohort events.  Coalescing merges
+events, so the two event-loop counters shrink in wakeup mode (each
+`_notify` wakes all waiters through one cohort event instead of one
+event per consumer); ``FUSED_EVENTS`` pins the fused counts.  Every
+other pinned field is bit-identical, and the ``legacy_rows`` section
+re-runs the grid at ``fetch_mode="legacy"`` asserting the original
+PINNED numbers exactly — the proof that the hot-path hoisting refactor
+(shared by both modes) changed nothing, isolating the event delta to
+cohort coalescing alone.  Poll mode registers no waiters and the grid
+has one partition per topic, so poll rows are event-identical too.
 """
 import hashlib
 
@@ -114,6 +127,23 @@ PINNED = {
     },
 }
 
+# PR 9: fused cohort delivery merges same-tick events, so only the two
+# event-loop counters move — and only in wakeup mode (poll registers no
+# waiters; the grid has one partition per topic, so no deliver cohorts).
+# Every other PINNED field must stay bit-identical under fusion.
+FUSED_EVENTS = {
+    (8, "wakeup"): {"engine_events": 1068, "events_scheduled": 1071},
+    (12, "wakeup"): {"engine_events": 1716, "events_scheduled": 1719},
+}
+
+# the counters allowed to differ between fused and legacy fetch modes
+EVENT_KEYS = ("engine_events", "events_scheduled", "events_cancelled")
+
+
+def _pins(key):
+    """PINNED with the fused event-count overlay (the default mode)."""
+    return {**PINNED[key], **FUSED_EVENTS.get(key, {})}
+
 
 @pytest.fixture(scope="module")
 def rows():
@@ -125,7 +155,7 @@ def rows():
 @pytest.mark.parametrize("key", sorted(PINNED))
 def test_pre_refactor_metrics_reproduced_exactly(rows, key):
     got = rows[key]
-    for field, want in PINNED[key].items():
+    for field, want in _pins(key).items():
         assert got[field] == want, \
             f"{key}: metrics[{field!r}] = {got[field]!r}, pinned {want!r}"
 
@@ -201,11 +231,16 @@ def heap_scheduler_rows():
     return _variant_rows(scheduler="heap")
 
 
+@pytest.fixture(scope="module")
+def legacy_rows():
+    return _variant_rows(fetch_mode="legacy")
+
+
 @pytest.mark.parametrize("key", sorted(PINNED))
 def test_record_mode_reproduces_pins_and_columnar_rows(
         rows, record_mode_rows, key):
     got = record_mode_rows[key]
-    for field, want in PINNED[key].items():
+    for field, want in _pins(key).items():
         assert got[field] == want, \
             f"{key} (record mode): metrics[{field!r}] = {got[field]!r}"
     # against the columnar run: everything but the allocation counter
@@ -221,12 +256,32 @@ def test_record_mode_reproduces_pins_and_columnar_rows(
 def test_heap_scheduler_reproduces_calendar_rows(
         rows, heap_scheduler_rows, key):
     got = heap_scheduler_rows[key]
-    for field, want in PINNED[key].items():
+    for field, want in _pins(key).items():
         assert got[field] == want, \
             f"{key} (heap): metrics[{field!r}] = {got[field]!r}"
     col = rows[key]
     assert {k: v for k, v in got.items() if k != "wall_s"} == \
         {k: v for k, v in col.items() if k != "wall_s"}
+
+
+@pytest.mark.parametrize("key", sorted(PINNED))
+def test_legacy_fetch_mode_reproduces_original_pins_exactly(
+        rows, legacy_rows, key):
+    # PR 9: legacy mode schedules per-consumer wakeups and per-partition
+    # deliver events exactly as before the fused-cohort refactor — it
+    # must hit the ORIGINAL pre-refactor PINNED numbers bit-for-bit,
+    # event counters included.  This isolates the hoisted `_fetch` body
+    # (shared by both modes) from cohort coalescing (fused-only).
+    got = legacy_rows[key]
+    for field, want in PINNED[key].items():
+        assert got[field] == want, \
+            f"{key} (legacy fetch): metrics[{field!r}] = {got[field]!r}, " \
+            f"pinned {want!r}"
+    # against the fused run: only the event-loop counters may differ
+    col = rows[key]
+    skip = set(EVENT_KEYS) | {"wall_s"}
+    assert {k: v for k, v in got.items() if k not in skip} == \
+        {k: v for k, v in col.items() if k not in skip}
 
 
 # ---------------------------------------------------------------------------

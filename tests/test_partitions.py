@@ -96,7 +96,7 @@ def test_range_assignor_contiguous_and_disjoint():
     parts = sorted(p for ps in assigned.values() for p in ps)
     assert parts == [0, 1, 2, 3, 4]         # disjoint cover
     for name in members:
-        ps = assigned[name]
+        ps = list(assigned[name])
         assert ps == list(range(ps[0], ps[-1] + 1))   # contiguous range
     sizes = sorted(len(ps) for ps in assigned.values())
     assert sizes == [2, 3]                  # balanced contiguous ranges

@@ -216,7 +216,14 @@ def test_profiler_counts_fingerprinted_wall_excluded():
     counts, wall = m["profile_counts"], m["profile_wall"]
     assert counts["scheduler_pops"] == m["engine_events"]
     assert counts["netem_path"] == m["path_queries"]
-    assert counts["fetch"] > 0 and counts["deliver"] > 0
+    # PR 9 split the old whole-call "fetch" bucket: fetch_ctl counts
+    # per-partition control attempts, fetch_take counts partitions that
+    # passed control and tried to take rows; "deliver" stays per-view in
+    # both fetch modes, "deliver_cohort" counts fused cohort events
+    assert counts["fetch_ctl"] > 0 and counts["fetch_take"] > 0
+    assert counts["deliver"] > 0
+    assert counts["deliver_cohort"] > 0
+    assert counts["deliver"] >= counts["deliver_cohort"]
     assert all(isinstance(v, int) for v in counts.values())
     assert all(isinstance(v, float) for v in wall.values())
     assert {"scheduler_pop", "event_fn", "netem_path"} <= set(wall)
